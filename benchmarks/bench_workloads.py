@@ -1,0 +1,30 @@
+"""Paper Table 2 workloads end-to-end: kNN-WordEmbed (d=64, k=2),
+kNN-SIFT (d=128, k=4), kNN-TagSpace (d=256, k=16); 4096 queries (as in the
+paper) against 64k vectors."""
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_jit
+from repro.core import binary, engine
+
+WORKLOADS = [("kNN-WordEmbed", 64, 2), ("kNN-SIFT", 128, 4),
+             ("kNN-TagSpace", 256, 16)]
+
+
+def run(report):
+    n, n_q = 1 << 16, 4096
+    rng = np.random.default_rng(0)
+    for name, d, k in WORKLOADS:
+        bits = jnp.asarray(rng.integers(0, 2, (n, d)), jnp.uint8)
+        qbits = jnp.asarray(rng.integers(0, 2, (n_q, d)), jnp.uint8)
+        xp, qp = binary.pack_bits(bits), binary.pack_bits(qbits)
+        search = jax.jit(functools.partial(
+            engine.search_chunked, k=k, d=d, chunk=1 << 16, method="mxu"))
+        us = time_jit(lambda: search(xp, qp), warmup=1, iters=3)
+        report(row(f"table2/{name}", us,
+                   f"d={d};k={k};qps={n_q/us*1e6:.0f};"
+                   f"Mcmp_per_s={n*n_q/us:.0f}"))

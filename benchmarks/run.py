@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig4]
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_compounding, bench_energy_proxy, bench_indexing,
+                        bench_packing, bench_statistical_reduction,
+                        bench_throughput, bench_workloads)
+
+BENCHES = [
+    ("fig4", bench_throughput),
+    ("fig5", bench_indexing),
+    ("fig6", bench_energy_proxy),
+    ("table2", bench_workloads),
+    ("fig8", bench_packing),
+    ("fig11", bench_statistical_reduction),
+    ("fig15", bench_compounding),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for tag, mod in BENCHES:
+        if args.only and args.only not in tag:
+            continue
+        try:
+            mod.run(print)
+        except Exception:  # noqa: BLE001
+            failed.append(tag)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

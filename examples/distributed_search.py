@@ -1,0 +1,57 @@
+"""Distributed similarity search across a (fake) multi-device mesh — the
+paper's system end-to-end at cluster shape:
+
+* datastore sharded over every mesh axis (macro-level parallelism),
+* per-shard chunked scans (partial reconfiguration),
+* hierarchical top-k' merge (statistical activation reduction) with the
+  recall/bandwidth trade swept live.
+
+Run (sets its own fake-device flag, like the dry-run):
+    PYTHONPATH=src python examples/distributed_search.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.core import binary, engine, hierarchy  # noqa: E402
+
+
+def main():
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    axes = ("pod", "data", "model")
+    n_dev = 8
+    d, n, q, k = 128, 1 << 16, 32, 16
+    rng = np.random.default_rng(0)
+    bits = jnp.asarray(rng.integers(0, 2, (n, d)), jnp.uint8)
+    qbits = jnp.asarray(rng.integers(0, 2, (q, d)), jnp.uint8)
+    codes = binary.pack_bits(bits)
+    q_codes = binary.pack_bits(qbits)
+
+    exact_d, exact_i = engine.search_chunked(codes, q_codes, k, d)
+    sharded = engine.shard_datastore(codes, mesh, axes)
+    print(f"datastore: {n} x {d}b codes sharded over {n_dev} devices "
+          f"({codes.nbytes // n_dev} B/device)")
+
+    print(f"{'k_prime':>8} {'recall@16':>10} {'merge payload':>14} "
+          f"{'reduction':>10} {'analytic fail bound':>20}")
+    for k_local in (16, 8, 4, 2, 1):
+        with mesh:
+            sd, si = jax.jit(lambda c, qq, kl=k_local: engine.search_sharded(
+                c, qq, k, d, mesh, axes, k_local=kl))(sharded, q_codes)
+        recall = float(jnp.mean(jnp.any(
+            si[:, :, None] == exact_i[:, None, :], axis=1)))
+        payload = n_dev * k_local * 8          # (dist,id) pairs gathered
+        reduction = (n // n_dev) / k_local     # the paper's m / k'
+        bound = hierarchy.failure_bound(k, n_dev, k_local)
+        print(f"{k_local:>8} {recall:>10.3f} {payload:>12} B "
+              f"{reduction:>9.0f}x {bound:>20.4f}")
+    print("k'=k is exact; the paper's Fig. 11 trade appears as k' shrinks.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Rebuild dry-run records from cached .hlo.gz (parser iterations without
+recompiling). Usage: PYTHONPATH=src python experiments/reanalyze.py"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.launch import hlo, roofline  # noqa: E402
+
+
+def main():
+    n = 0
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        hlo_path = path[:-5] + ".hlo.gz"
+        if not os.path.exists(hlo_path):
+            continue
+        rec = json.load(open(path))
+        with gzip.open(hlo_path, "rt") as f:
+            stats = hlo.analyze(f.read())
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        rep = roofline.build_report(cfg, shape, rec["mesh"], rec["chips"],
+                                    stats, memory_stats=rec.get("memory_stats"),
+                                    cost_flops=rec.get("cost_analysis_flops"))
+        new = rep.as_dict()
+        for k in ("lower_s", "compile_s", "causal_skip", "zero1",
+                  "grad_compression", "attn_chunk", "attn_p_bf16",
+                  "microbatches", "multi_pod"):
+            if k in rec:
+                new[k] = rec[k]
+        json.dump(new, open(path, "w"), indent=1)
+        n += 1
+    print(f"re-analyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

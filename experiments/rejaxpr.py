@@ -1,0 +1,72 @@
+"""Patch existing dry-run records with jaxpr-level flops/io (trace only, no
+recompile; collectives/residency kept from the compiled-HLO analysis).
+
+Run: PYTHONPATH=src python experiments/rejaxpr.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import glob  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, "src")
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.launch import jaxpr_analysis, roofline  # noqa: E402
+from repro.launch.dryrun import build_step  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main():
+    meshes = {"16x16": make_production_mesh(),
+              "2x16x16": make_production_mesh(multi_pod=True)}
+    n = 0
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        rec = json.load(open(path))
+        mesh = meshes[rec["mesh"]]
+        chips = rec["chips"]
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        step_fn, args = build_step(
+            cfg, shape, mesh,
+            causal_skip=rec.get("causal_skip", False),
+            zero1=rec.get("zero1", True),
+            grad_compression=rec.get("grad_compression", "none"),
+            attn_chunk=rec.get("attn_chunk", 1024),
+            attn_p_bf16=rec.get("attn_p_bf16", False),
+            microbatches=rec.get("microbatches", 1),
+            opt_int8=rec.get("opt_int8", False),
+            exact_retrieval=rec.get("exact_retrieval", False),
+            pure_dp=rec.get("pure_dp", False),
+            a2a_int8=rec.get("a2a_int8", False),
+            datastore_scale=rec.get("datastore_scale", 1.0))
+        with mesh:
+            jstats = jaxpr_analysis.analyze_step(step_fn, args, chips)
+        stats = {
+            "flops": jstats["flops"],
+            "io_bytes": jstats["io_bytes"],
+            "coll_bytes": dict(rec.get("collective_detail") or {},
+                               total=rec["collective_bytes_per_device"]),
+            "coll_counts": rec.get("collective_counts"),
+        }
+        rep = roofline.build_report(cfg, shape, rec["mesh"], chips, stats,
+                                    memory_stats=rec.get("memory_stats"),
+                                    cost_flops=rec.get("cost_analysis_flops"))
+        new = rep.as_dict()
+        for k in ("lower_s", "compile_s", "causal_skip", "zero1",
+                  "grad_compression", "attn_chunk", "attn_p_bf16",
+                  "microbatches", "opt_int8", "exact_retrieval", "pure_dp",
+                  "a2a_int8", "datastore_scale", "multi_pod"):
+            if k in rec:
+                new[k] = rec[k]
+        json.dump(new, open(path, "w"), indent=1)
+        n += 1
+        print(f"{os.path.basename(path)[:-5]}: mem_s {rec['memory_s']:.3f} -> "
+              f"{new['memory_s']:.3f}, comp_s {rec['compute_s']:.3f} -> "
+              f"{new['compute_s']:.3f}")
+    print(f"patched {n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Build the EXPERIMENTS.md roofline tables from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+
+def load(mesh_tag, tag_filter=""):
+    recs = []
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        if parts[2] != mesh_tag:
+            continue
+        if (len(parts) > 3) != bool(tag_filter):
+            continue
+        if tag_filter and parts[3] != tag_filter:
+            continue
+        recs.append(json.load(open(path)))
+    return recs
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def table(recs):
+    rows = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "GB/dev | fits | model TFLOP | useful | roofline frac |")
+    sep = "|" + "---|" * 11
+    rows.append(hdr)
+    rows.append(sep)
+    recs = sorted(recs, key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    for r in recs:
+        m = r.get("memory_stats") or {}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{m.get('per_device_bytes', 0)/1e9:.1f} | "
+            f"{'Y' if m.get('fits_hbm') else 'N'} | "
+            f"{r['model_flops']/1e12:.0f} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_frac']:.4f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    tag = sys.argv[2] if len(sys.argv) > 2 else ""
+    print(table(load(mesh, tag)))

@@ -1,0 +1,21 @@
+"""Config registry: importing this package registers every assigned arch."""
+from repro.configs.base import (BlockKind, ModelConfig, MoEConfig,
+                                RetrievalConfig, RWKVConfig, ShapeConfig,
+                                SSMConfig, StepKind, TrainConfig, get_config,
+                                list_archs, register, scaled_down)
+from repro.configs.shapes import (SHAPES, get_shape, runnable_cells,
+                                  shape_applicable)
+
+# arch registrations (import side effects)
+from repro.configs import (arctic_480b, deepseek_67b, gemma_2b, granite_20b,  # noqa: F401
+                           internlm2_20b, kimi_k2, llava_next_mistral_7b,
+                           musicgen_medium, rwkv6_1p6b, zamba2_2p7b)
+
+ALL_ARCHS = list_archs()
+
+__all__ = [
+    "ALL_ARCHS", "BlockKind", "ModelConfig", "MoEConfig", "RetrievalConfig",
+    "RWKVConfig", "SHAPES", "ShapeConfig", "SSMConfig", "StepKind",
+    "TrainConfig", "get_config", "get_shape", "list_archs", "register",
+    "runnable_cells", "scaled_down", "shape_applicable",
+]

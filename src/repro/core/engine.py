@@ -1,0 +1,157 @@
+"""The kNN engine: chunked Hamming scan + bounded-domain top-k, single-device
+and mesh-distributed.
+
+Structure mirrors the paper's system:
+
+* one *chunk* of codes resident per step == one AP board configuration;
+  the ``lax.scan`` over chunks with an O(k) running merge is "partial
+  reconfiguration" at zero swap cost (§3.3);
+* the mesh-sharded datastore == macro-level parallelism across boards;
+* the distributed merge reports only each shard's local top-k'
+  (``k_local``) == statistical activation reduction (§6.3); with
+  ``k_local == k`` the result is exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import binary, topk
+
+
+class DistanceMethod:
+    XOR = "xor"          # bit-packed popcount (VPU; 32x less HBM traffic)
+    MXU = "mxu"          # +/-1 bf16 matmul (systolic array)
+    PALLAS = "pallas"    # fused Pallas kernel (kernels/hamming.py)
+
+
+def _distances(q_packed: jax.Array, chunk_codes: jax.Array, d: int,
+               method: str) -> jax.Array:
+    if method == DistanceMethod.XOR:
+        return binary.hamming_xor(q_packed, chunk_codes)
+    if method == DistanceMethod.MXU:
+        qb = binary.unpack_bits(q_packed, d)
+        xb = binary.unpack_bits(chunk_codes, d)
+        # bf16 hits the MXU on TPU; CPU has no native bf16 — use f32 there
+        dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+        return binary.hamming_mxu(qb, xb, d, dtype=dt)
+    if method == DistanceMethod.PALLAS:
+        from repro.kernels import ops
+        return ops.hamming_distance(q_packed, chunk_codes)
+    raise ValueError(method)
+
+
+def search_chunked(codes_packed: jax.Array, q_packed: jax.Array, k: int,
+                   d: int, chunk: int = 1 << 16,
+                   method: str = DistanceMethod.XOR,
+                   id_offset: jax.Array | int = 0,
+                   select: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Scan the dataset in chunks. codes: (N, W) uint32, q: (Q, W).
+
+    ``select``: 'auto' (composite-key fast path), 'counting' (histogram
+    counting select), or 'bisect' (scatter-free counting select).
+    Returns (dists (Q,k) ascending, global ids (Q,k))."""
+    N, W = codes_packed.shape
+    Q = q_packed.shape[0]
+    chunk = min(chunk, N)
+    if select == "auto" and (d + 1) * chunk >= (1 << 24):
+        # keep the composite key exactly representable in f32
+        chunk = max(1024, ((1 << 24) // (d + 1)) // 1024 * 1024)
+    n_chunks = (N + chunk - 1) // chunk
+    if N % chunk:
+        pad = n_chunks * chunk - N
+        # pad with all-ones codes at max distance; ids beyond N are masked by
+        # their distance landing at the back of the merge
+        codes_packed = jnp.pad(codes_packed, ((0, pad), (0, 0)),
+                               constant_values=jnp.uint32(0xFFFFFFFF))
+    chunks = codes_packed.reshape(n_chunks, chunk, W)
+
+    select_fn = {"auto": topk.composite_topk, "counting": topk.counting_topk,
+                 "bisect": topk.counting_topk_bisect}[select]
+
+    def body(carry, xs):
+        best_d, best_i = carry
+        ci, codes_c = xs
+        dist = _distances(q_packed, codes_c, d, method)
+        # padding rows (global id >= N) must rank strictly last — their
+        # all-ones codes can otherwise tie or beat real rows
+        gids = ci * chunk + jnp.arange(chunk)
+        dist = jnp.where(gids[None, :] < N, jnp.minimum(dist, d), d + 1)
+        cd, cidx = select_fn(dist, min(k, chunk), d + 1)
+        cids = cidx + ci * chunk
+        best_d, best_i = topk.merge_topk(best_d, best_i, cd, cids, k)
+        return (best_d, best_i), None
+
+    init = (jnp.full((Q, k), d + 1, jnp.int32), jnp.full((Q, k), N, jnp.int32))
+    (bd, bi), _ = jax.lax.scan(body, init, (jnp.arange(n_chunks), chunks))
+    return bd, bi + id_offset
+
+
+class KNNEngine(NamedTuple):
+    """Immutable engine state (a pytree — jit/shard friendly)."""
+
+    codes: jax.Array          # (N, W) uint32 packed
+    d: int                    # code bits
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    def search(self, q_packed: jax.Array, k: int, chunk: int = 1 << 16,
+               method: str = DistanceMethod.XOR):
+        return search_chunked(self.codes, q_packed, k, self.d, chunk, method)
+
+
+# ---------------------------------------------------------------------------
+# distributed search (hierarchical top-k == statistical activation reduction)
+# ---------------------------------------------------------------------------
+
+def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
+                   mesh: Mesh, axes: Sequence[str], k_local: Optional[int] = None,
+                   chunk: int = 1 << 16, method: str = DistanceMethod.XOR):
+    """Datastore sharded over ``axes`` (cardinality sharding); queries
+    replicated. Each shard reports its local top-k' and the merge runs over
+    the gathered (devices * k') candidates.
+
+    k_local < k trades exactness for an m/k' collective-bandwidth reduction
+    with the accuracy model of core/hierarchy.py; k_local=None means k (exact).
+    """
+    k_local = k if k_local is None else k_local
+    axes = tuple(axes)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    N = codes_packed.shape[0]
+    n_loc = N // n_dev
+
+    def local(codes_loc, q):
+        # flat shard index over the sharding axes
+        flat = jnp.zeros((), jnp.int32)
+        for a in axes:
+            flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
+        ld, li = search_chunked(codes_loc, q, k_local, d, chunk, method,
+                                id_offset=flat * n_loc)
+        # hierarchical merge: gather only k' candidates per shard
+        gd = jax.lax.all_gather(ld, axes, tiled=False)   # (n_dev, Q, k')
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        gd = jnp.moveaxis(gd, 0, 1).reshape(q.shape[0], n_dev * k_local)
+        gi = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], n_dev * k_local)
+        sd, order = jax.lax.sort_key_val(gd, gi, dimension=-1)
+        return sd[:, :k], order[:, :k]
+
+    mapped = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None)))
+    return mapped(codes_packed, q_packed)
+
+
+def shard_datastore(codes_packed: jax.Array, mesh: Mesh, axes: Sequence[str]):
+    """Place a packed datastore sharded over the given mesh axes."""
+    sharding = NamedSharding(mesh, P(tuple(axes), None))
+    return jax.device_put(codes_packed, sharding)

@@ -1,0 +1,184 @@
+"""Spatial indexing structures (paper §3.4): hierarchical k-means (IVF),
+LSH tables, and randomized kd-trees.
+
+As in the paper, index *traversal* is factored out of the scan engine: it
+selects candidate buckets, and the engine brute-force scans them. Bucket
+capacity plays the role of "one AP board configuration" — chosen near the
+engine's natural chunk capacity. kd-tree construction/traversal run on the
+host (numpy), exactly the paper's host/accelerator split; k-means and LSH
+traversals are cheap dense ops and run on device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binary, topk
+
+
+def _pad_buckets(assign: np.ndarray, n_buckets: int, cap: int) -> np.ndarray:
+    """assign: (N,) bucket of each id -> (n_buckets, cap) int32, -1 padded."""
+    table = np.full((n_buckets, cap), -1, np.int32)
+    fill = np.zeros(n_buckets, np.int64)
+    for i, b in enumerate(assign):
+        if fill[b] < cap:
+            table[b, fill[b]] = i
+            fill[b] += 1
+    return table
+
+
+def _scan_candidates(codes: jax.Array, q_packed: jax.Array, cand: jax.Array,
+                     k: int, d: int):
+    """Brute-force scan of per-query candidate lists.
+
+    codes: (N, W); cand: (Q, C) int32 with -1 padding -> (dists, ids)."""
+    safe = jnp.maximum(cand, 0)
+    cand_codes = codes[safe]                                  # (Q, C, W)
+    x = jax.lax.bitwise_xor(q_packed[:, None, :], cand_codes)
+    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    dist = jnp.where(cand < 0, d + 1, dist)
+    dd, ii = topk.counting_topk(dist, k, d + 1)
+    ids = jnp.take_along_axis(cand, jnp.minimum(ii, cand.shape[1] - 1), axis=-1)
+    ids = jnp.where(dd > d, -1, ids)
+    return dd, ids
+
+
+# ---------------------------------------------------------------------------
+# hierarchical k-means (IVF)
+# ---------------------------------------------------------------------------
+
+class KMeansIndex(NamedTuple):
+    centroids: jax.Array    # (C, dim) f32
+    buckets: jax.Array      # (C, cap) int32, -1 padded
+    codes: jax.Array        # (N, W) packed
+    d: int
+
+
+def kmeans_build(data: jax.Array, codes: jax.Array, d: int, n_clusters: int,
+                 iters: int = 10, capacity_factor: float = 2.0,
+                 key=None) -> KMeansIndex:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    data = data.astype(jnp.float32)
+    n = data.shape[0]
+    init_idx = jax.random.choice(key, n, (n_clusters,), replace=False)
+    cent = data[init_idx]
+
+    def step(cent, _):
+        d2 = (jnp.sum(data**2, 1)[:, None] - 2 * data @ cent.T
+              + jnp.sum(cent**2, 1)[None])
+        a = jnp.argmin(d2, axis=1)
+        one = jax.nn.one_hot(a, n_clusters, dtype=jnp.float32)
+        counts = jnp.maximum(one.sum(0), 1.0)
+        return (one.T @ data) / counts[:, None], None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d2 = (jnp.sum(data**2, 1)[:, None] - 2 * data @ cent.T + jnp.sum(cent**2, 1)[None])
+    assign = np.asarray(jnp.argmin(d2, axis=1))
+    cap = int(np.ceil(capacity_factor * n / n_clusters))
+    table = _pad_buckets(assign, n_clusters, cap)
+    return KMeansIndex(centroids=cent, buckets=jnp.asarray(table), codes=codes, d=d)
+
+
+def kmeans_search(index: KMeansIndex, queries: jax.Array, q_packed: jax.Array,
+                  k: int, nprobe: int = 1):
+    """Traverse: nearest nprobe centroids (a distance calc per node, as the
+    paper notes for k-means indexes); then scan the union of buckets."""
+    q = queries.astype(jnp.float32)
+    cent = index.centroids
+    d2 = (jnp.sum(q**2, 1)[:, None] - 2 * q @ cent.T + jnp.sum(cent**2, 1)[None])
+    _, probe = jax.lax.top_k(-d2, nprobe)                     # (Q, nprobe)
+    cand = index.buckets[probe].reshape(q.shape[0], -1)       # (Q, nprobe*cap)
+    return _scan_candidates(index.codes, q_packed, cand, k, index.d)
+
+
+# ---------------------------------------------------------------------------
+# LSH tables (bit-sampling over the binary codes)
+# ---------------------------------------------------------------------------
+
+class LSHIndex(NamedTuple):
+    bit_ids: jax.Array      # (T, b) which code bits form each table's key
+    buckets: jax.Array      # (T, 2^b, cap) int32, -1 padded
+    codes: jax.Array        # (N, W)
+    d: int
+
+
+def _hash_codes(codes_bits: jax.Array, bit_ids: jax.Array) -> jax.Array:
+    """codes_bits: (N, d) {0,1}; bit_ids: (T, b) -> keys (T, N) int32."""
+    sel = codes_bits[:, bit_ids]                              # (N, T, b)
+    weights = (1 << jnp.arange(bit_ids.shape[1], dtype=jnp.int32))
+    return jnp.sum(sel.astype(jnp.int32) * weights, axis=-1).T
+
+
+def lsh_build(codes: jax.Array, d: int, n_tables: int = 4, bits_per_table: int = 12,
+              capacity_factor: float = 4.0, key=None) -> LSHIndex:
+    key = key if key is not None else jax.random.PRNGKey(1)
+    n = codes.shape[0]
+    bit_ids = jax.random.randint(key, (n_tables, bits_per_table), 0, d, jnp.int32)
+    keys = np.asarray(_hash_codes(binary.unpack_bits(codes, d), bit_ids))
+    n_buckets = 1 << bits_per_table
+    cap = int(np.ceil(capacity_factor * n / n_buckets))
+    tables = np.stack([_pad_buckets(keys[t], n_buckets, cap)
+                       for t in range(n_tables)])
+    return LSHIndex(bit_ids=bit_ids, buckets=jnp.asarray(tables), codes=codes, d=d)
+
+
+def lsh_search(index: LSHIndex, q_packed: jax.Array, k: int):
+    q_bits = binary.unpack_bits(q_packed, index.d)
+    keys = _hash_codes(q_bits, index.bit_ids)                 # (T, Q)
+    T = index.bit_ids.shape[0]
+    cand = jnp.concatenate(
+        [index.buckets[t][keys[t]] for t in range(T)], axis=-1)  # (Q, T*cap)
+    return _scan_candidates(index.codes, q_packed, cand, k, index.d)
+
+
+# ---------------------------------------------------------------------------
+# randomized kd-trees (host build + host traversal, device scan)
+# ---------------------------------------------------------------------------
+
+class KDTreeIndex:
+    """Forest of randomized kd-trees over the float vectors. Median splits on
+    a dim sampled from the top-variance dims (FLANN-style)."""
+
+    def __init__(self, data: np.ndarray, codes, d: int, n_trees: int = 4,
+                 leaf_size: int = 512, top_dims: int = 8, seed: int = 0):
+        self.codes = codes
+        self.d = d
+        self.data = np.asarray(data, np.float32)
+        self.rng = np.random.default_rng(seed)
+        variances = self.data.var(axis=0)
+        self.top_dims = np.argsort(-variances)[:top_dims]
+        self.leaf_size = leaf_size
+        self.trees = [self._build(np.arange(len(self.data))) for _ in range(n_trees)]
+
+    def _build(self, ids: np.ndarray):
+        if len(ids) <= self.leaf_size:
+            return ("leaf", ids.astype(np.int32))
+        dim = int(self.rng.choice(self.top_dims))
+        vals = self.data[ids, dim]
+        median = float(np.median(vals))
+        left = ids[vals <= median]
+        right = ids[vals > median]
+        if len(left) == 0 or len(right) == 0:          # degenerate split
+            return ("leaf", ids.astype(np.int32))
+        return ("node", dim, median, self._build(left), self._build(right))
+
+    def _traverse(self, node, q: np.ndarray) -> np.ndarray:
+        while node[0] == "node":
+            _, dim, median, l, r = node
+            node = l if q[dim] <= median else r
+        return node[1]
+
+    def search(self, queries: np.ndarray, q_packed, k: int):
+        """Host traversal per tree -> device scan of the candidate union."""
+        queries = np.asarray(queries, np.float32)
+        cap = self.leaf_size * len(self.trees)
+        cand = np.full((len(queries), cap), -1, np.int32)
+        for qi, q in enumerate(queries):
+            ids = np.unique(np.concatenate(
+                [self._traverse(t, q) for t in self.trees]))[:cap]
+            cand[qi, :len(ids)] = ids
+        return _scan_candidates(self.codes, q_packed, jnp.asarray(cand), k, self.d)

@@ -1,0 +1,79 @@
+"""kNN-LM retrieval: the paper's similarity-search engine as a first-class
+serving feature of every backbone.
+
+The datastore maps binary-quantized hidden states -> next-token ids
+(Khandelwal et al.-style). At decode time the current hidden state is ITQ-
+encoded, searched against the mesh-sharded datastore (Hamming kNN — the
+paper's engine), and the neighbor distribution is interpolated with the LM
+softmax.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, RetrievalConfig
+from repro.core import binary, engine, quantize
+
+
+class DataStore(NamedTuple):
+    codes: jax.Array        # (N, W) uint32 packed ITQ codes of hidden states
+    values: jax.Array       # (N,) int32 next-token ids
+    itq: quantize.ITQParams
+
+
+def build_datastore(hidden: jax.Array, next_tokens: jax.Array, code_bits: int,
+                    itq_iters: int = 20, key=None) -> DataStore:
+    """hidden: (N, d_model) f32; next_tokens: (N,) int32."""
+    itq = quantize.itq_train(hidden, code_bits, iters=itq_iters, key=key)
+    codes = binary.pack_bits(quantize.itq_encode(hidden, itq))
+    return DataStore(codes=codes, values=next_tokens.astype(jnp.int32), itq=itq)
+
+
+def synthetic_datastore(cfg: ModelConfig, n: Optional[int] = None, key=None) -> DataStore:
+    """Deterministic random datastore sized per the arch's RetrievalConfig
+    (used by serve_step dry-runs and benchmarks)."""
+    r = cfg.retrieval
+    n = n if n is not None else r.datastore_size
+    key = key if key is not None else jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    W = binary.padded_words(r.code_bits)
+    codes = jax.random.randint(k1, (n, W), 0, 2**31 - 1, jnp.int32).astype(jnp.uint32)
+    values = jax.random.randint(k2, (n,), 0, cfg.vocab_size, jnp.int32)
+    itq = quantize.ITQParams(
+        mean=jnp.zeros((cfg.d_model,), jnp.float32),
+        proj=jnp.eye(cfg.d_model, r.code_bits, dtype=jnp.float32),
+        rot=jnp.eye(r.code_bits, dtype=jnp.float32))
+    return DataStore(codes=codes, values=values, itq=itq)
+
+
+def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
+               vocab: int, mesh: Optional[Mesh] = None,
+               axes: Sequence[str] = (), method: str = "xor",
+               temperature: float = 8.0) -> jax.Array:
+    """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab)."""
+    q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
+    if mesh is not None and axes:
+        dists, ids = engine.search_sharded(
+            store.codes, q_codes, rcfg.k, rcfg.code_bits, mesh, axes,
+            k_local=rcfg.local_k, chunk=rcfg.chunk_size, method=method)
+    else:
+        dists, ids = engine.search_chunked(
+            store.codes, q_codes, rcfg.k, rcfg.code_bits,
+            chunk=rcfg.chunk_size, method=method)
+    ids = jnp.minimum(ids, store.values.shape[0] - 1)
+    neighbor_tokens = store.values[ids]                          # (Q, k)
+    w = jax.nn.softmax(-dists.astype(jnp.float32) / temperature, axis=-1)
+    p = jnp.zeros((hidden.shape[0], vocab), jnp.float32)
+    p = p.at[jnp.arange(hidden.shape[0])[:, None], neighbor_tokens].add(w)
+    return jnp.log(jnp.maximum(p, 1e-9))
+
+
+def interpolate(lm_logits: jax.Array, knn_log_probs: jax.Array,
+                lam: float) -> jax.Array:
+    """log((1-lam) softmax(lm) + lam exp(knn_log_probs))."""
+    lm_logp = jax.nn.log_softmax(lm_logits.astype(jnp.float32), axis=-1)
+    return jnp.logaddexp(lm_logp + jnp.log1p(-lam), knn_log_probs + jnp.log(lam))

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: causal flash-attention forward (GQA).
+
+The §Perf analysis (EXPERIMENTS.md) shows prefill is bound by the
+probability-tensor HBM round trips of the XLA blockwise path. This kernel
+keeps the (bq, bk) score/probability tiles in VMEM: HBM traffic collapses to
+q + o + the S/bq-fold streaming re-read of k/v — the classic flash trade.
+
+Layout: q (B, H, S, hd); k, v (B, KV, S, hd); grid (B, H, nq, nk) with the
+output block revisited along nk and the online-softmax state (acc, m, l)
+carried in VMEM scratch. Causal blocks with j > i are masked (compute is
+skipped via pl.when; the rectangular fetch remains — block-sparse grid
+pruning is the follow-up). GQA: the k/v index map sends q-head h to kv-head
+h // G.
+
+Validated in interpret mode against the XLA blockwise oracle
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # compute only blocks intersecting the causal triangle
+    @pl.when(j * bk < (i + 1) * bq)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                          # (bq, bk)
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        bq: int = 512, bk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd).
+
+    S % bq == 0 and S % bk == 0 (ops.py pads)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    grid = (B, H, S // bq, S // bk)
+    scale = hd ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),     # acc
+            pltpu.VMEM((bq,), jnp.float32),        # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),        # l (running sum)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: bit-packed Hamming distance (XOR + popcount).
+
+This is the paper's compute phase (the "Hamming macros") as a VPU kernel.
+The dataset codes stream HBM->VMEM in (BN, W) tiles; each grid cell computes
+a (BQ, BN) distance tile entirely in VMEM. Bit-packing gives 32x less HBM
+traffic than any float layout — the memory-roofline win that makes the
+cardinality scan bandwidth-optimal (see DESIGN.md "vector packing").
+
+Popcount uses ``lax.population_count`` (a native VPU op on TPU). Block
+shapes are MXU/VPU aligned: BQ multiple of 8 (sublane), BN multiple of 128
+(lane). W (= code_bits/32, <= 8 for 256-bit codes) is kept whole per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, x_ref, out_ref):
+    q = q_ref[...]                                 # (BQ, W) int32
+    x = x_ref[...]                                 # (BN, W) int32
+    xor = jax.lax.bitwise_xor(q[:, None, :], x[None, :, :])   # (BQ, BN, W)
+    pc = jax.lax.population_count(xor).astype(jnp.int32)
+    out_ref[...] = jnp.sum(pc, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def hamming_distance_pallas(q_packed: jax.Array, x_packed: jax.Array,
+                            bq: int = 128, bn: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (Q, W), x: (N, W) packed int32/uint32 -> (Q, N) int32.
+
+    Q % bq == 0 and N % bn == 0 (ops.py pads)."""
+    Q, W = q_packed.shape
+    N, _ = x_packed.shape
+    bq, bn = min(bq, Q), min(bn, N)
+    assert Q % bq == 0 and N % bn == 0, (Q, N, bq, bn)
+    q32 = q_packed.astype(jnp.int32) if q_packed.dtype != jnp.int32 else q_packed
+    x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
+
+    grid = (Q // bq, N // bn)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.int32),
+        interpret=interpret,
+    )(q32, x32)

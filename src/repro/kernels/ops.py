@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` — the kernel
+body runs faithfully in Python/XLA for correctness validation; on TPU the
+same calls compile to Mosaic. Shapes are padded to block multiples here so
+the kernels stay assert-simple.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.hamming import hamming_distance_pallas
+from repro.kernels.topk_select import hamming_hist_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_rows(a: jax.Array, target: int, fill: int = 0) -> jax.Array:
+    pad = target - a.shape[0]
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)), constant_values=fill)
+    return a
+
+
+def hamming_distance(q_packed: jax.Array, x_packed: jax.Array,
+                     bq: int = 128, bn: int = 512) -> jax.Array:
+    """(Q, W) x (N, W) packed -> (Q, N) int32 (Pallas on TPU, interpreted on
+    CPU). Arbitrary Q/N; padding handled here."""
+    Q, N = q_packed.shape[0], x_packed.shape[0]
+    bq = min(bq, _round_up(Q, 8))
+    bn = min(bn, _round_up(N, 128))
+    qp = _pad_rows(q_packed, _round_up(Q, bq))
+    xp = _pad_rows(x_packed, _round_up(N, bn))
+    out = hamming_distance_pallas(qp, xp, bq=bq, bn=bn, interpret=_interpret())
+    return out[:Q, :N]
+
+
+def hamming_hist(q_packed: jax.Array, x_packed: jax.Array, bins: int,
+                 bq: int = 64, bn: int = 1024, sub: int = 64) -> jax.Array:
+    """Fused distance+histogram: (Q, W) x (N, W) -> (Q, bins) int32.
+
+    Padded dataset rows are all-ones codes; their spurious counts in the
+    clamp bin (bins-1) are subtracted before returning."""
+    Q, N = q_packed.shape[0], x_packed.shape[0]
+    bq = min(bq, _round_up(Q, 8))
+    bn = min(bn, _round_up(N, sub))
+    sub = min(sub, bn)
+    qp = _pad_rows(q_packed, _round_up(Q, bq))
+    n_padded = _round_up(N, bn)
+    xp = _pad_rows(x_packed.astype(jnp.int32), n_padded, fill=-1)
+    hist = hamming_hist_pallas(qp, xp, bins, bq=bq, bn=bn, sub=sub,
+                               interpret=_interpret())
+    hist = hist[:Q]
+    if n_padded != N:
+        # exact correction: subtract the pad rows' contribution (tiny block)
+        hist = hist - ref.hamming_hist_ref(q_packed.astype(jnp.int32), xp[N:], bins)
+    return hist
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    bq: int = 512, bk: int = 512) -> jax.Array:
+    """Causal flash-attention forward. q: (B, S, H, hd); k, v: (B, S, KV, hd)
+    -> (B, S, H, hd). Pads S to a block multiple (future positions are
+    causally invisible); transposes to the kernel's (B, H, S, hd) layout."""
+    B, S, H, hd = q.shape
+    blk = max(bq, bk)
+    s_pad = _round_up(S, blk)
+    if s_pad != S:
+        pz = lambda a: jnp.pad(a, ((0, 0), (0, s_pad - S), (0, 0), (0, 0)))
+        q, k, v = pz(q), pz(k), pz(v)
+    out = flash_attention_fwd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), bq=min(bq, s_pad), bk=min(bk, s_pad),
+        interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)[:, :S]
+
+
+__all__ = ["flash_attention", "hamming_distance", "hamming_hist", "ref"]

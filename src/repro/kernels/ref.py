@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these, and they serve as the XLA fallback path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_distance_ref(q_packed: jax.Array, x_packed: jax.Array) -> jax.Array:
+    """q: (Q, W) uint32/int32 packed codes; x: (N, W) -> (Q, N) int32."""
+    x = jax.lax.bitwise_xor(q_packed[:, None, :], x_packed[None, :, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_hist_ref(q_packed: jax.Array, x_packed: jax.Array,
+                     bins: int) -> jax.Array:
+    """Distance histogram over the bounded domain [0, bins) — pass 1 of the
+    temporal-sort-analogue counting select. -> (Q, bins) int32."""
+    dist = hamming_distance_ref(q_packed, x_packed)
+    Q = dist.shape[0]
+    return jnp.zeros((Q, bins), jnp.int32).at[
+        jnp.arange(Q)[:, None], jnp.minimum(dist, bins - 1)].add(1)
+
+
+def bitpack_ref(bits: jax.Array) -> jax.Array:
+    """bits: (N, d) {0,1}, d % 32 == 0 -> (N, d//32) int32 (bit i of word w
+    is dim w*32+i)."""
+    n, d = bits.shape
+    b = bits.reshape(n, d // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32).astype(jnp.int32)

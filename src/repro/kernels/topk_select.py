@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused Hamming-distance + bounded-domain histogram.
+
+Pass 1 of the two-pass counting select (the temporal sort's "race"): for
+each query, count how many dataset codes land at each distance in [0, bins).
+Fusing the XOR/popcount with the histogram means the (Q, N) distance matrix
+never exists in HBM — only the (Q, bins) counts leave the kernel, the same
+reduction the AP performs by keeping counters next to the Hamming macros.
+
+Grid is (Q/BQ, N/BN); the output tile is revisited across the N dimension
+(same index_map block for every j) and accumulated in VMEM — initialize at
+j == 0, add thereafter. The (BQ, sub, bins) one-hot intermediate is kept
+small by an inner fori over BN/sub sub-tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(q_ref, x_ref, hist_ref, *, bins: int, sub: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    q = q_ref[...]                                  # (BQ, W)
+    x = x_ref[...]                                  # (BN, W)
+    bn = x.shape[0]
+    bq = q.shape[0]
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bins), 2)
+
+    def body(s, acc):
+        xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
+        xor = jax.lax.bitwise_xor(q[:, None, :], xs[None, :, :])
+        dist = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
+        dist = jnp.minimum(dist, bins - 1)
+        onehot = (dist[:, :, None] == bin_iota).astype(jnp.int32)  # (BQ,sub,bins)
+        return acc + jnp.sum(onehot, axis=1)
+
+    acc = jax.lax.fori_loop(0, bn // sub, body,
+                            jnp.zeros((bq, bins), jnp.int32))
+    hist_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "bq", "bn", "sub", "interpret"))
+def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
+                        bq: int = 64, bn: int = 1024, sub: int = 64,
+                        interpret: bool = False) -> jax.Array:
+    """q: (Q, W), x: (N, W) -> (Q, bins) int32 distance histogram."""
+    Q, W = q_packed.shape
+    N, _ = x_packed.shape
+    bq, bn = min(bq, Q), min(bn, N)
+    sub = min(sub, bn)
+    assert Q % bq == 0 and N % bn == 0 and bn % sub == 0, (Q, N, bq, bn, sub)
+    q32 = q_packed.astype(jnp.int32) if q_packed.dtype != jnp.int32 else q_packed
+    x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
+
+    grid = (Q // bq, N // bn)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, bins=bins, sub=sub),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bins), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, bins), jnp.int32),
+        interpret=interpret,
+    )(q32, x32)

@@ -1,0 +1,387 @@
+"""Loop-aware HLO analysis: per-device FLOPs, HBM traffic, and collective
+bytes from the compiled (SPMD, per-device) module text.
+
+Why not ``compiled.cost_analysis()``? Two measured facts (see EXPERIMENTS.md
+§Dry-run methodology): (1) HloCostAnalysis visits a ``while`` body ONCE —
+a scan over 95 layers is undercounted 95x; (2) it has no collective term.
+
+This parser:
+  * builds name -> (dtype, dims) for every instruction,
+  * per computation, tallies dot FLOPs (2 * numel(out) * prod(contracting
+    dims)), fusion-boundary IO bytes (operands + result of each top-level
+    op ~= HBM round trips on TPU), and collective operand bytes,
+  * expands ``while`` bodies by trip count (recovered from the loop
+    condition's comparison constant), ``conditional`` branches at 1x, and
+    descends into fusions for FLOPs only (a fusion is one HBM-level op).
+
+All numbers are per device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# ops that are free at the HBM level (layout/book-keeping)
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "while",
+             "conditional", "call", "custom-call"}
+
+# elementwise ops: the CPU backend leaves many of these at top level, but the
+# TPU backend fuses them into their producers/consumers — charging them would
+# overcount HBM traffic ~50x (measured; see EXPERIMENTS.md). Their operand
+# traffic is captured by the producing dot/fusion/reduce ops.
+_FUSABLE_OPS = {"convert", "add", "subtract", "multiply", "divide", "select",
+                "compare", "maximum", "minimum", "clamp", "broadcast",
+                "reshape", "transpose", "negate", "exponential", "log",
+                "tanh", "rsqrt", "sqrt", "power", "and", "or", "not", "xor",
+                "abs", "sign", "floor", "ceil", "round-nearest-afz",
+                "shift-left", "shift-right-logical", "shift-right-arithmetic",
+                "logistic", "cosine", "sine", "exponential-minus-one",
+                "log-plus-one", "is-finite", "popcnt", "remainder", "atan2",
+                "reverse", "rng-bit-generator", "rng", "map", "expm1",
+                "log1p"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_EQ_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+_WHILE_ATTR_RE = re.compile(r"(condition|body)=%?([\w.\-]+)")
+_CALLS_ATTR_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUEFALSE_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_def(ln: str):
+    """Parse '  %name = <type> opcode(...)' robustly (tuple types may contain
+    /*index=N*/ comments, so a pure regex on '=' fails). Returns
+    (name, type_str, opcode) or None."""
+    m = _NAME_EQ_RE.match(ln)
+    if not m:
+        return None
+    rest = ln[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str, rest2 = rest[:end + 1], rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp:]
+    om = _OPCODE_RE.match(rest2)
+    if not om:
+        return None
+    return m.group(1), type_str, om.group(1)
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shapes_in(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    total = 0
+    for _, dims in _shapes_in(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Computations start at column 0 with ``%name (`` or ``ENTRY %name (``
+    and close with a column-0 ``}``."""
+    comps: Dict[str, List[str]] = {}
+    cur_name, cur_lines = None, []
+    for ln in hlo_text.splitlines():
+        if cur_name is None:
+            if (ln.startswith("%") or ln.startswith("ENTRY ")) and \
+                    ln.rstrip().endswith("{"):
+                m = _COMP_HDR_RE.match(ln)
+                if m:
+                    cur_name, cur_lines = m.group(1), []
+        else:
+            if ln.startswith("}"):
+                comps[cur_name] = cur_lines
+                cur_name = None
+            else:
+                cur_lines.append(ln)
+    return comps
+
+
+def _operand_names(ln: str, opcode: str) -> List[str]:
+    paren = ln.find(opcode + "(")
+    if paren < 0:
+        return []
+    args = ln[paren + len(opcode) + 1:]
+    depth, buf = 1, []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return re.findall(r"%?([\w.\-]+)", "".join(buf))
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    best = 1
+    for ln in cond_lines:
+        if "compare" in ln or "constant" in ln:
+            for c in _CONST_RE.findall(ln):
+                best = max(best, int(c))
+    return best
+
+
+_NONCOMPUTE = {"parameter", "constant", "bitcast", "tuple",
+               "get-tuple-element", "convert", "broadcast", "reshape", "copy",
+               "transpose"}
+
+
+def _fusion_kind(ln: str, comps, callees) -> str:
+    """Classify a fusion via its callee computation: 'convert' when the body
+    is conversions/layout only; 'dus:<update_bytes>' when the root is a
+    dynamic-update-slice; '' otherwise."""
+    for callee in callees:
+        lines = comps.get(callee)
+        if not lines:
+            continue
+        opcodes = []
+        root_def = None
+        for cl in lines:
+            d = _parse_def(cl)
+            if d:
+                opcodes.append(d[2])
+                if cl.lstrip().startswith("ROOT"):
+                    root_def = (cl, d)
+        if opcodes and all(o in _NONCOMPUTE for o in opcodes):
+            return "convert"
+        if root_def and root_def[1][2] == "dynamic-update-slice":
+            ops_ = _operand_names(root_def[0], "dynamic-update-slice")
+            if len(ops_) > 1:
+                # update operand's type defined inside the callee
+                upd_type = None
+                for cl in lines:
+                    d = _parse_def(cl)
+                    if d and d[0] == ops_[1]:
+                        upd_type = d[1]
+                        break
+                if upd_type:
+                    return f"dus:{_type_bytes(upd_type)}"
+    return ""
+
+
+class ModuleStats(dict):
+    """{'flops', 'io_bytes', 'coll_bytes': {kind: b, 'total': b},
+    'coll_counts': {kind: n}} — all per device, loop-expanded."""
+
+
+def analyze(hlo_text: str) -> ModuleStats:
+    comps = _split_computations(hlo_text)
+
+    types: Dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            d = _parse_def(ln)
+            if d:
+                types[d[0]] = d[1]
+
+    def bytes_of(name: str) -> int:
+        return _type_bytes(types.get(name, ""))
+
+    local = {}
+    for name, lines in comps.items():
+        flops = 0.0
+        io = 0.0
+        coll_b = defaultdict(float)
+        coll_c = defaultdict(float)
+        loop_children: List[Tuple[float, str]] = []
+        branch_children: List[Tuple[float, str]] = []
+        fusion_children: List[Tuple[float, str]] = []
+        for ln in lines:
+            d = _parse_def(ln)
+            if not d:
+                continue
+            out_name, out_type, opcode = d
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if opcode.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                nb = sum(bytes_of(n) for n in _operand_names(ln, opcode))
+                if nb == 0:
+                    nb = _type_bytes(out_type)
+                coll_b[base] += nb
+                coll_c[base] += 1
+                io += nb + _type_bytes(out_type)
+                continue
+            if base == "while":
+                attrs = dict(_WHILE_ATTR_RE.findall(ln))
+                tm = _TRIP_RE.search(ln)    # XLA annotates known_trip_count
+                trip = int(tm.group(1)) if tm else _trip_count(
+                    comps.get(attrs.get("condition", ""), []))
+                if "body" in attrs:
+                    loop_children.append((float(trip), attrs["body"]))
+                continue
+            if base == "conditional":
+                for grp in _BRANCH_RE.findall(ln):
+                    for n in re.findall(r"%?([\w.\-]+)", grp):
+                        branch_children.append((1.0, n))
+                for n in _TRUEFALSE_RE.findall(ln):
+                    branch_children.append((1.0, n))
+                continue
+            if base == "dot":
+                ops = _operand_names(ln, opcode)
+                cdims = _LHS_CDIMS_RE.search(ln)
+                csize = 1
+                if cdims and ops:
+                    lhs_shapes = _shapes_in(types.get(ops[0], ""))
+                    if lhs_shapes:
+                        _, lhs_dims = lhs_shapes[0]
+                        for ci in (int(c) for c in cdims.group(1).split(",") if c):
+                            if ci < len(lhs_dims):
+                                csize *= lhs_dims[ci]
+                flops += 2.0 * _numel(out_type) * csize
+                io += _type_bytes(out_type) + sum(bytes_of(n) for n in ops[:2])
+                continue
+            if base == "fusion":
+                for callee in _CALLS_ATTR_RE.findall(ln):
+                    fusion_children.append((1.0, callee))
+                # producer-once accounting: a fusion's operands were already
+                # charged at their producers; only its materialized OUTPUT is
+                # new HBM traffic. Two backend-artifact exemptions:
+                #  * convert-only fusions (CPU upcasts bf16 params to f32 at
+                #    the top level; on TPU these fuse into consumers): free;
+                #  * fusions whose root is a dynamic-update-slice (scan-ys
+                #    stacking / in-place cache writes): charge the update
+                #    slice, not the whole aliased buffer.
+                kind = _fusion_kind(ln, comps, _CALLS_ATTR_RE.findall(ln))
+                if kind == "convert":
+                    continue
+                if kind and kind.startswith("dus:"):
+                    io += 2 * int(kind.split(":")[1])
+                    continue
+                io += _type_bytes(out_type)
+                continue
+            if base == "call":
+                for callee in _CALLS_ATTR_RE.findall(ln) or \
+                        [n for n in _operand_names(ln, opcode) if n in comps]:
+                    loop_children.append((1.0, callee))
+                continue
+            if base in _FREE_OPS or base in _FUSABLE_OPS:
+                continue
+            if base in ("slice", "dynamic-slice", "gather"):
+                # reads only the sliced/gathered rows, not the whole operand
+                io += 2 * _type_bytes(out_type)
+                continue
+            if base == "dynamic-update-slice":
+                # in-place (aliased) update: touches only the update operand
+                ops_ = _operand_names(ln, opcode)
+                upd = bytes_of(ops_[1]) if len(ops_) > 1 else 0
+                io += 2 * upd
+                continue
+            if base == "scatter":
+                ops_ = _operand_names(ln, opcode)
+                upd = sum(bytes_of(n) for n in ops_[1:])
+                io += 2 * upd
+                continue
+            # generic top-level op: operands + result round-trip HBM
+            io += _type_bytes(out_type) + sum(
+                bytes_of(n) for n in _operand_names(ln, opcode))
+        local[name] = dict(flops=flops, io=io, coll_b=dict(coll_b),
+                           coll_c=dict(coll_c), loops=loop_children,
+                           branches=branch_children, fusions=fusion_children)
+
+    memo: Dict[str, dict] = {}
+
+    def expand(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in local:
+            return dict(flops=0.0, io=0.0, coll_b={}, coll_c={})
+        loc = local[name]
+        flops, io = loc["flops"], loc["io"]
+        coll_b = defaultdict(float, loc["coll_b"])
+        coll_c = defaultdict(float, loc["coll_c"])
+        for mult, child in loc["loops"] + loc["branches"]:
+            sub = expand(child, stack + (name,))
+            flops += mult * sub["flops"]
+            io += mult * sub["io"]
+            for k, v in sub["coll_b"].items():
+                coll_b[k] += mult * v
+            for k, v in sub["coll_c"].items():
+                coll_c[k] += mult * v
+        for mult, child in loc["fusions"]:
+            sub = expand(child, stack + (name,))
+            flops += mult * sub["flops"]    # FLOPs only — IO seen at call site
+        res = dict(flops=flops, io=io, coll_b=dict(coll_b), coll_c=dict(coll_c))
+        memo[name] = res
+        return res
+
+    entry = None
+    for ln in hlo_text.splitlines():
+        if ln.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", ln)
+            if m:
+                entry = m.group(1)
+        if entry:
+            break
+    if entry is None or entry not in local:
+        entry = max(local, key=lambda n: local[n]["flops"] + local[n]["io"]) \
+            if local else None
+    if entry is None:
+        return ModuleStats(flops=0.0, io_bytes=0.0,
+                           coll_bytes={"total": 0.0}, coll_counts={})
+    res = expand(entry)
+    coll_b = dict(res["coll_b"])
+    coll_b["total"] = sum(coll_b.values())
+    return ModuleStats(flops=res["flops"], io_bytes=res["io"],
+                       coll_bytes=coll_b, coll_counts=dict(res["coll_c"]))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    return analyze(hlo_text)["coll_bytes"]
+
+
+def collective_counts(hlo_text: str) -> Dict[str, float]:
+    return analyze(hlo_text)["coll_counts"]

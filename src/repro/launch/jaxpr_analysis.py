@@ -1,0 +1,191 @@
+"""Jaxpr-level FLOP / HBM-traffic analysis — the dtype-faithful instrument.
+
+Why not the compiled HLO? The CPU backend computes bf16 models in f32 (every
+param upcast, every dot f32) and inserts layout copies — none of which exist
+on the TPU target, inflating the memory term ~2x and erasing dtype-level
+optimizations (e.g. the bf16 probability tensor) from the accounting. The
+jaxpr is backend-free: logical dtypes, exact scan trip counts, and the whole
+train step (fwd + bwd + optimizer) after tracing.
+
+Model (mirrors TPU fusion granularity):
+  * dot_general: FLOPs = 2 * numel(out) * prod(contracting dims);
+    IO = operand bytes + result bytes (weights/activations at logical dtype)
+  * slicing ops (gather/dynamic-slice/slice): result bytes only;
+    dynamic-update-slice / scatter: 2x update bytes (aliased in place)
+  * reductions / cumsum / sort / top_k / conv: operands + result
+  * elementwise / layout ops: free (fuse into producers/consumers on TPU)
+  * scan: body counted once x length (exact); cond branches at 1x
+  * pjit / remat / custom_vjp / shard_map calls: recursed
+
+Shapes are GLOBAL (pre-SPMD): callers divide by the chip count for the
+per-device roofline (assumes even sharding of the dominant traffic — true
+for batch-sharded activations; replicated small weights are undercounted,
+documented in EXPERIMENTS.md).
+
+Collectives are invisible at this level — they come from the compiled-HLO
+parser (launch/hlo.py), which is exact for payload bytes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+
+# elementwise / layout primitives that fuse away on TPU
+_FREE = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "pow", "integer_pow", "abs", "sign",
+    "floor", "ceil", "round", "convert_element_type", "bitcast_convert_type",
+    "select_n", "compare", "and", "or", "not", "xor", "eq", "ne", "lt", "le",
+    "gt", "ge", "broadcast_in_dim", "reshape", "transpose", "squeeze",
+    "expand_dims", "rev", "iota", "clamp", "erf", "erf_inv", "erfc",
+    "is_finite", "population_count", "clz", "shift_left",
+    "shift_right_logical", "shift_right_arithmetic", "rem", "nextafter",
+    "real", "imag", "cos", "sin", "tan", "asin", "acos", "atan", "atan2",
+    "sinh", "cosh", "exp2", "log1p", "expm1", "square", "copy",
+    "stop_gradient", "device_put", "sharding_constraint", "cumlogsumexp",
+    "and_", "or_", "xor_", "not_", "pjit_sharding_constraint", "mul_add",
+    "reduce_precision", "platform_index", "axis_index", "partition_id",
+}
+
+_RECURSE_PARAMS = ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr",
+                   "fun_jaxpr", "branches")
+
+
+def _bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0
+    return math.prod(aval.shape) * aval.dtype.itemsize if aval.shape else \
+        aval.dtype.itemsize
+
+
+def _numel(v) -> int:
+    aval = v.aval
+    return math.prod(aval.shape) if getattr(aval, "shape", ()) else 1
+
+
+def _inner(obj):
+    return obj.jaxpr if hasattr(obj, "jaxpr") and hasattr(obj, "consts") else obj
+
+
+def analyze_jaxpr(jaxpr) -> Dict[str, float]:
+    """Returns {'flops', 'io_bytes'} for one (possibly closed) jaxpr —
+    whole-program logical totals."""
+    jaxpr = _inner(jaxpr)
+    flops = 0.0
+    io = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            dims = eqn.params["dimension_numbers"]
+            (lc, _), _ = dims
+            lhs = eqn.invars[0].aval
+            csize = math.prod(lhs.shape[i] for i in lc) if lc else 1
+            flops += 2.0 * _numel(eqn.outvars[0]) * csize
+            io += sum(_bytes(v) for v in eqn.invars) + _bytes(eqn.outvars[0])
+            continue
+        if prim in ("conv_general_dilated",):
+            # not used by our models, but count conservatively
+            io += sum(_bytes(v) for v in eqn.invars) + _bytes(eqn.outvars[0])
+            continue
+        if prim == "scan":
+            sub = analyze_jaxpr(eqn.params["jaxpr"])
+            length = eqn.params["length"]
+            flops += length * sub["flops"]
+            io += length * sub["io_bytes"]
+            continue
+        if prim == "while":
+            sub_b = analyze_jaxpr(eqn.params["body_jaxpr"])
+            flops += sub_b["flops"]      # trip count unknowable here; our
+            io += sub_b["io_bytes"]      # models only use scan (annotated)
+            continue
+        if prim == "cond":
+            for br in eqn.params["branches"]:
+                sub = analyze_jaxpr(br)
+                flops += sub["flops"]
+                io += sub["io_bytes"]
+            continue
+        if prim == "shard_map":
+            # the body jaxpr has PER-SHARD shapes and runs once per device:
+            # scale back to global-equivalent so the caller's /chips division
+            # yields the correct per-device numbers
+            mesh = eqn.params.get("mesh")
+            mult = 1
+            if mesh is not None:
+                for s in dict(getattr(mesh, "shape", {})).values():
+                    mult *= s
+            sub = analyze_jaxpr(eqn.params.get("jaxpr")
+                                or eqn.params.get("call_jaxpr"))
+            flops += mult * sub["flops"]
+            io += mult * sub["io_bytes"]
+            continue
+        if prim == "pallas_call":
+            # kernel boundary == fusion boundary: HBM traffic is the operands
+            # + result, except streamed operands re-read once per q-row block.
+            # Our flash kernel: grid (B, H, nq, nk) — k/v re-read nq times.
+            gm = eqn.params.get("grid_mapping")
+            grid = tuple(getattr(gm, "grid", ()) or ())
+            io += _bytes(eqn.outvars[0]) + _bytes(eqn.invars[0])
+            rr = grid[2] if len(grid) >= 4 else 1
+            for v in eqn.invars[1:]:
+                io += rr * _bytes(v)
+            if len(grid) >= 4:   # flash attention: 4 * B*H*S*S*hd (rect fetch)
+                q_aval = eqn.invars[0].aval
+                b, h, s, hd = q_aval.shape
+                s_k = eqn.invars[1].aval.shape[2]
+                flops += 4.0 * b * h * s * s_k * hd * 0.5   # causal skip in-kernel
+            continue
+        recursed = False
+        for key in _RECURSE_PARAMS:
+            if key in eqn.params and key != "branches":
+                obj = eqn.params[key]
+                if obj is None:
+                    continue
+                sub = analyze_jaxpr(obj)
+                flops += sub["flops"]
+                io += sub["io_bytes"]
+                recursed = True
+                break
+        if recursed:
+            continue
+        if prim in ("gather", "dynamic_slice", "slice", "take"):
+            io += 2 * _bytes(eqn.outvars[0])
+            continue
+        if prim in ("dynamic_update_slice",):
+            io += 2 * _bytes(eqn.invars[1])
+            continue
+        if prim == "scatter" or prim.startswith("scatter"):
+            upd = _bytes(eqn.invars[2]) if len(eqn.invars) > 2 else 0
+            io += 2 * upd
+            continue
+        if prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                    "reduce_and", "reduce_or", "argmax", "argmin",
+                    "reduce_window_sum", "reduce_window_max", "cumsum",
+                    "cummax", "cummin", "cumprod", "sort", "top_k",
+                    "concatenate", "pad", "select_and_scatter_add"):
+            io += sum(_bytes(v) for v in eqn.invars) + sum(
+                _bytes(v) for v in eqn.outvars)
+            continue
+        if prim in _FREE:
+            continue
+        if prim in ("psum", "all_gather", "reduce_scatter", "all_to_all",
+                    "ppermute", "psum_scatter", "pmax", "pmin"):
+            # manual collectives (shard_map): counted by the HLO parser too;
+            # charge their IO here so memory term sees the payload movement
+            io += sum(_bytes(v) for v in eqn.invars)
+            continue
+        # unknown compute-ish primitive: charge operands + results
+        io += sum(_bytes(v) for v in eqn.invars) + sum(
+            _bytes(v) for v in eqn.outvars)
+    return {"flops": flops, "io_bytes": io}
+
+
+def analyze_step(step_fn, args, n_devices: int) -> Dict[str, float]:
+    """Trace a (jitted) step against ShapeDtypeStruct args and return
+    PER-DEVICE {'flops', 'io_bytes'} under even-sharding division."""
+    traced = step_fn.trace(*args)
+    stats = analyze_jaxpr(traced.jaxpr)
+    return {"flops": stats["flops"] / n_devices,
+            "io_bytes": stats["io_bytes"] / n_devices}

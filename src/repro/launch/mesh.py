@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod (16, 16) over ("data", "model") — 256 chips,
+one TPU v5e pod — or multi-pod (2, 16, 16) over ("pod", "data", "model") —
+512 chips, where the "pod" axis is the DCN-connected outer data axis.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import compat
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return compat.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh over however many (possibly fake) devices exist — used by
+    CI-scale dry-run smoke tests."""
+    n = 1
+    for s in shape:
+        n *= s
+    assert len(jax.devices()) >= n, (len(jax.devices()), shape)
+    return compat.make_mesh(shape, axes)
+
+
+# TPU v5e single-chip peaks (roofline constants, see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link
+HBM_BYTES = 16 * 1024**3       # capacity per chip

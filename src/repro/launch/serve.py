@@ -1,0 +1,63 @@
+"""Serving launcher: batched decode with kNN-LM retrieval.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --scaled \
+        --requests 8 --max-new 16
+"""
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro import compat
+from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core import retrieval
+from repro.dist import sharding
+from repro.models import lm
+from repro.runtime import server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, required=True)
+    ap.add_argument("--scaled", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.scaled:
+        cfg = scaled_down(get_config(args.arch))
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
+    else:
+        from repro.launch.mesh import make_production_mesh
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    pspecs = sharding.param_specs(cfg, mesh)
+    with mesh:
+        params = jax.jit(lambda: lm.init_params(jax.random.PRNGKey(0), cfg),
+                         out_shardings=sharding.named(mesh, pspecs))()
+    store = None
+    if cfg.retrieval.enabled:
+        n = 4096 if args.scaled else cfg.retrieval.datastore_size
+        store = retrieval.synthetic_datastore(cfg, n=n)
+        store = jax.device_put(
+            store, sharding.named(mesh, sharding.datastore_specs(mesh)))
+
+    srv = server.Server(cfg, mesh, params, max_batch=args.max_batch,
+                        max_len=args.max_len, store=store)
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+        srv.submit(server.Request(uid=uid, prompt=prompt,
+                                  max_new_tokens=args.max_new))
+    ticks = srv.run()
+    print(f"served {len(srv.done)}/{args.requests} requests in {ticks} ticks; "
+          f"throughput {len(srv.done) * args.max_new / max(ticks, 1):.2f} tok/tick")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, StepKind, TrainConfig
+from repro.core import retrieval as retrieval_mod
+from repro.models import frontends, lm
+from repro.optim import optimizer
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def param_specs_sds(cfg: ModelConfig):
+    return _sds(jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg)))
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeConfig):
+    b = {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        b["prefix_emb"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.frontend_positions, frontends.frontend_dim(cfg)),
+            jnp.dtype(cfg.dtype))
+    return b
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, tc: TrainConfig = TrainConfig()):
+    """Returns the tuple of ShapeDtypeStruct args for the step this shape
+    lowers (train_step / prefill_step / serve_step)."""
+    params = param_specs_sds(cfg)
+    if shape.step == StepKind.TRAIN:
+        opt = _sds(jax.eval_shape(
+            lambda: optimizer.init(
+                jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg)),
+                tc)))
+        return (params, opt, batch_sds(cfg, shape),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    if shape.step == StepKind.PREFILL:
+        return (params, batch_sds(cfg, shape))
+    # decode: one new token against a KV cache of seq_len
+    state = _sds(jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, shape.global_batch, shape.seq_len)))
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    active = jax.ShapeDtypeStruct((shape.global_batch,), jnp.bool_)
+    args = (params, token, state, active)
+    if cfg.retrieval.enabled:
+        store = _sds(jax.eval_shape(lambda: retrieval_mod.synthetic_datastore(cfg)))
+        args = args + (store,)
+    return args

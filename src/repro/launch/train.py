@@ -1,0 +1,54 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --shape train_4k --steps 200 --ckpt-dir /ckpt/run1 [--scaled]
+
+On real hardware this runs under `jax.distributed.initialize()` (one process
+per host); in this container use --scaled for a CPU-feasible reduced config
+on a (1,1) mesh. The loop is fault-tolerant: auto-resume, async checkpoints,
+deterministic data, straggler monitor (see runtime/trainer.py).
+"""
+import argparse
+
+import jax
+
+from repro import compat
+from repro.configs import ALL_ARCHS, TrainConfig, get_config, get_shape, scaled_down
+from repro.runtime import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--scaled", action="store_true",
+                    help="reduced config + (1,1) mesh for CPU runs")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    args = ap.parse_args()
+
+    shape = get_shape(args.shape)
+    if args.scaled:
+        cfg = scaled_down(get_config(args.arch))
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
+        seq_len = args.seq_len or 128
+        global_batch = args.global_batch or 8
+    else:
+        from repro.launch.mesh import make_production_mesh
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        seq_len = args.seq_len or shape.seq_len
+        global_batch = args.global_batch or shape.global_batch
+
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=min(20, args.steps // 10 + 1))
+    rep = trainer.train(cfg, tc, mesh, seq_len=seq_len,
+                        global_batch=global_batch, ckpt_dir=args.ckpt_dir)
+    print(f"final loss {rep.final_loss:.4f} over {rep.steps_done} steps "
+          f"(resumed_from={rep.resumed_from})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, frontends, layers, lm, mamba2, moe, rwkv6  # noqa: F401

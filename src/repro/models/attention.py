@@ -1,0 +1,240 @@
+"""GQA/MQA causal attention with blockwise (online-softmax) prefill and a
+KV-cache decode step.
+
+Prefill never materializes the (S, S) score matrix: it streams KV chunks with
+a running (max, sum, acc) online softmax — flash attention expressed in XLA.
+Two schedules are provided:
+
+* rectangular (baseline): every (q-chunk, kv-chunk) pair is computed and the
+  causal mask zeroes the upper triangle — ~2x the useful FLOPs.
+* triangular (``causal_skip=True``): a scan over the static list of valid
+  (i, j<=i) chunk pairs — exact-FLOP causal attention, the §Perf optimization.
+
+Decode attends one new token against a (possibly sequence-sharded) cache; the
+softmax reduction over the sharded length axis is left to the SPMD partitioner
+(log-sum-exp merge == flash-decode).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, KV, hd)
+    v: jax.Array          # (B, S_max, KV, hd)
+
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype).reshape(
+            d_model, num_heads, head_dim),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype).reshape(
+            d_model, num_kv_heads, head_dim),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype).reshape(
+            d_model, num_kv_heads, head_dim),
+        "wo": (dense_init(ko, num_heads * head_dim, d_model, dtype)).reshape(
+            num_heads, head_dim, d_model),
+    }
+
+
+def _qkv(params: Params, x: jax.Array, positions: jax.Array, rope_theta: float):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    return jnp.einsum("bqhgk,bshk->bhgqs", q, k)
+
+
+def _grouped_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B, KV, G, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, KV, G, hd)."""
+    return jnp.einsum("bhgqs,bshk->bqhgk", p, v)
+
+
+def _online_step(carry, k_blk, v_blk, q, mask, p_bf16: bool = False):
+    """One online-softmax accumulation step.
+
+    carry: (acc (B,KV,G,Sq,hd) f32, m (B,KV,G,Sq) f32, l (B,KV,G,Sq) f32)
+    """
+    acc, m, l = carry
+    s = _grouped_scores(q, k_blk).astype(jnp.float32)           # (B,KV,G,Sq,Kc)
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    # guard the fully-masked case (s == m_new == NEG_INF would give exp(0)=1)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    # §Perf knob: p round-trips HBM between the two matmuls at XLA fusion
+    # granularity; storing it in the model dtype halves that dominant traffic
+    # while (acc, l) still accumulate in f32.
+    p = p.astype(v_blk.dtype) if p_bf16 else p
+    pv = _grouped_out(p, v_blk).astype(jnp.float32)
+    acc = acc * alpha[..., None] + pv.transpose(0, 2, 3, 1, 4)
+    return acc, m_new, l
+
+
+def blockwise_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                               chunk: int = 1024, causal_skip: bool = False,
+                               p_bf16: bool = False) -> jax.Array:
+    """q,k,v: (B, S, H|KV, hd) post-rope. Returns (B, S, H, hd).
+
+    Streams KV in ``chunk``-sized blocks with an online softmax; optionally
+    skips fully-masked chunk pairs (triangular schedule).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    chunk = min(chunk, S)
+    S_pad = ((S + chunk - 1) // chunk) * chunk
+    if S_pad != S:
+        # pad with future positions: causal masking (kpos <= qpos < S) keeps
+        # them invisible to every real query; padded q rows are sliced off.
+        pz = lambda a: jnp.pad(a, [(0, 0), (0, S_pad - S), (0, 0), (0, 0)])
+        q, k, v = pz(q), pz(k), pz(v)
+    S_orig, S = S, S_pad
+    q = (q * scale).reshape(B, S, KV, G, hd)
+    nc = S // chunk
+
+    qc = q.reshape(B, nc, chunk, KV, G, hd)
+    kc = k.reshape(B, nc, chunk, KV, hd)
+    vc = v.reshape(B, nc, chunk, KV, hd)
+    # position indices of each element within a chunk
+    pos_in = jnp.arange(chunk)
+
+    def init_carry():
+        acc = jnp.zeros((B, KV, G, chunk, hd), jnp.float32)
+        m = jnp.full((B, KV, G, chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, chunk), jnp.float32)
+        return acc, m, l
+
+    def finish(acc, m, l):
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,KV,G,chunk,hd) -> (B,chunk,KV,G,hd)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    if not causal_skip:
+        # rectangular: for each q chunk scan all kv chunks with causal mask
+        def per_q(i, q_i):
+            def body(carry, j_kv):
+                j, k_j, v_j = j_kv
+                qpos = i * chunk + pos_in[:, None]
+                kpos = j * chunk + pos_in[None, :]
+                mask = (kpos <= qpos)[None, None, None]          # (1,1,1,Sq,Kc)
+                return _online_step(carry, k_j, v_j, q_i, mask, p_bf16), None
+
+            (acc, m, l), _ = jax.lax.scan(
+                body, init_carry(),
+                (jnp.arange(nc), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+            return finish(acc, m, l)
+
+        out = jax.lax.map(lambda args: per_q(*args),
+                          (jnp.arange(nc), qc.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1).reshape(B, S, KV, G, hd)[:, :S_orig]
+        return out.reshape(B, S_orig, H, hd).astype(v.dtype)
+
+    # triangular: scan over the static (i, j<=i) pair list, carrying the
+    # running softmax state of the current q row; flush when j == i.
+    pairs_i = jnp.array([i for i in range(nc) for _ in range(i + 1)])
+    pairs_j = jnp.array([j for i in range(nc) for j in range(i + 1)])
+
+    out0 = jnp.zeros((nc, B, chunk, KV, G, hd), jnp.float32)
+
+    def body(carry, ij):
+        i, j = ij
+        acc, m, l, out = carry
+        q_i = jax.lax.dynamic_index_in_dim(qc, i, axis=1, keepdims=False)
+        k_j = jax.lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+        v_j = jax.lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+        diag = i == j
+        qpos = i * chunk + pos_in[:, None]
+        kpos = j * chunk + pos_in[None, :]
+        mask = (kpos <= qpos)[None, None, None]
+        acc, m, l = _online_step((acc, m, l), k_j, v_j, q_i, mask, p_bf16)
+        flushed = finish(acc, m, l)
+        out = jax.lax.cond(
+            diag,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, flushed, i, axis=0),
+            lambda o: o, out)
+        # reset the carry after a flush
+        acc = jnp.where(diag, 0.0, 1.0) * acc
+        m = jnp.where(diag, NEG_INF, m)
+        l = jnp.where(diag, 0.0, l)
+        return (acc, m, l, out), None
+
+    init = (*init_carry(), out0)
+    (_, _, _, out), _ = jax.lax.scan(body, init, (pairs_i, pairs_j))
+    out = out.swapaxes(0, 1).reshape(B, S, KV, G, hd)[:, :S_orig]
+    return out.reshape(B, S_orig, H, hd).astype(v.dtype)
+
+
+def attention_prefill(params: Params, x: jax.Array, positions: jax.Array,
+                      rope_theta: float, chunk: int = 1024,
+                      causal_skip: bool = False, p_bf16: bool = False,
+                      impl: str = "xla",
+                      return_cache: bool = False):
+    """Full-sequence causal attention. x: (B, S, d). ``impl``: 'xla'
+    (blockwise online-softmax scan) or 'flash' (Pallas kernel — VMEM-resident
+    score tiles; forward-only, so serving paths only)."""
+    q, k, v = _qkv(params, x, positions, rope_theta)
+    if impl == "flash":
+        from repro.kernels import ops
+        out = ops.flash_attention(q, k, v, bq=min(chunk, 512), bk=min(chunk, 512))
+    else:
+        out = blockwise_causal_attention(q, k, v, chunk=chunk,
+                                         causal_skip=causal_skip, p_bf16=p_bf16)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if return_cache:
+        return y, KVCache(k=k, v=v)
+    return y
+
+
+def attention_decode(params: Params, x: jax.Array, cache: KVCache, pos,
+                     rope_theta: float, active: Optional[jax.Array] = None):
+    """One-token decode. x: (B, 1, d); cache holds S_max past positions;
+    ``pos`` is the new token's index — scalar or per-row (B,) vector
+    (continuous batching). Rows with ``active`` False leave the cache
+    untouched (their writes land out of bounds and drop).
+
+    Returns (y (B, 1, d), updated cache). The softmax statistics reduce over
+    the cache length axis; when that axis is mesh-sharded the partitioner
+    emits the log-sum-exp combine (flash-decode).
+    """
+    B, _, d = x.shape
+    S_max = cache.k.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    q, k_new, v_new = _qkv(params, x, positions, rope_theta)
+    write = pos if active is None else jnp.where(active, pos, S_max)
+    # per-row cache insert as a fused select (a bf16 scatter would upcast to
+    # f32 on some backends and force a whole-cache convert in the layer loop)
+    sel = (jnp.arange(S_max)[None, :] == write[:, None])[:, :, None, None]
+    k = jnp.where(sel, k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(sel, v_new.astype(cache.v.dtype), cache.v)
+
+    KV = k.shape[2]
+    H = q.shape[2]
+    G = H // KV
+    hd = q.shape[3]
+    qg = (q * hd ** -0.5).reshape(B, 1, KV, G, hd)
+    s = _grouped_scores(qg, k).astype(jnp.float32)            # (B,KV,G,1,S)
+    valid = (jnp.arange(S_max)[None, :] <= pos[:, None])[:, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _grouped_out(p.astype(v.dtype), v)                  # (B,1,KV,G,hd)
+    y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, 1, H, hd), params["wo"])
+    return y, KVCache(k=k, v=v)

@@ -1,0 +1,37 @@
+"""Modality frontend stubs.
+
+Per the task spec, ``[audio]`` / ``[vlm]`` entries cover the transformer
+backbone only — the real EnCodec / CLIP-anyres encoders are out of scope and
+``input_specs()`` supplies *precomputed* frame/patch embeddings. This module
+defines the stub dimensions and deterministic synthetic embedding generators
+used by smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# raw embedding width delivered by the (stubbed) modality encoder
+_FRONTEND_DIMS = {
+    "audio_frames": 128,      # EnCodec latent frame width
+    "vision_patches": 1024,   # CLIP-L patch embedding width
+}
+
+
+def frontend_dim(cfg: ModelConfig) -> int:
+    if cfg.frontend == "none":
+        return 0
+    return _FRONTEND_DIMS[cfg.frontend]
+
+
+def synthetic_prefix(cfg: ModelConfig, batch: int, key=None) -> jax.Array:
+    """Deterministic stand-in for precomputed frontend embeddings:
+    (batch, frontend_positions, frontend_dim)."""
+    if cfg.frontend == "none":
+        return None
+    key = key if key is not None else jax.random.PRNGKey(17)
+    return jax.random.normal(
+        key, (batch, cfg.frontend_positions, frontend_dim(cfg)), jnp.float32
+    ).astype(jnp.dtype(cfg.dtype))

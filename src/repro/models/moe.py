@@ -1,0 +1,283 @@
+"""Mixture-of-Experts FFN with real expert parallelism.
+
+Three execution strategies:
+
+* ``reference`` — loop over experts with masking; exact, used on a single
+  device (smoke tests, numerics oracle).
+* ``a2a`` — production EP: tokens are sequence-sharded over the expert axis,
+  routed entries are exchanged with ``lax.all_to_all`` (dispatch), expert
+  FFNs run on their owning shard, and a reverse all-to-all returns outputs
+  (DeepSeek/Switch-style, drop policy at static capacity).
+* ``allgather`` — decode-friendly: token counts are tiny, so tokens are
+  replicated over the expert axis, every shard computes only its local
+  experts' assignments, and a psum combines partial outputs.
+
+Expert weights are stored (E, d, ff); at trillion-param scale the caller
+shards ff over the data axes (FSDP) and the per-layer gather is inserted by
+SPMD when the weights enter the shard_map with an E-only spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, mlp, mlp_init
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Params:
+    moe = cfg.moe
+    d, ff, E = cfg.d_model, moe.expert_d_ff, moe.num_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * d ** -0.5),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (E, ff, d), jnp.float32) * ff ** -0.5).astype(dtype),
+    }
+    if moe.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, ff * moe.num_shared_experts, "swiglu", dtype)
+    if moe.dense_residual_d_ff:
+        p["dense"] = mlp_init(ks[5], d, moe.dense_residual_d_ff, cfg.mlp_activation, dtype)
+    return p
+
+
+def _route(router_w, x_tok, k: int):
+    """x_tok: (T, d) -> (weights (T,K) f32, idx (T,K) i32, probs (T,E) f32)."""
+    logits = (x_tok.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    return weights, idx, probs
+
+
+def _aux_loss(probs, idx, num_experts: int) -> jax.Array:
+    """Switch-style load-balancing loss (local shard statistics)."""
+    T, K = idx.shape
+    f = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = f / (T * K)
+    p_mean = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p_mean)
+
+
+def _expert_ffn(w_gate, w_up, w_out, xbuf):
+    """xbuf: (E_loc, C, d) -> (E_loc, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", xbuf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xbuf, w_up)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(xbuf.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def _rank_in_group(group: jax.Array, num_groups: int) -> jax.Array:
+    """Stable rank of each element within its group. group: (N,) int in [0,G)."""
+    oh = jax.nn.one_hot(group, num_groups, dtype=jnp.int32)      # (N, G)
+    return (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(group.shape[0]), group]
+
+
+# ---------------------------------------------------------------------------
+# reference path
+# ---------------------------------------------------------------------------
+
+def moe_reference(params: Params, cfg: ModelConfig, x_tok: jax.Array):
+    """Exact capacity-free MoE on one device. x_tok: (T, d)."""
+    moe = cfg.moe
+    weights, idx, probs = _route(params["router"], x_tok, moe.experts_per_token)
+
+    def per_expert(y, e):
+        w_e = jnp.sum(jnp.where(idx == e, weights, 0.0), axis=-1)  # (T,)
+        g = jax.nn.silu((x_tok @ params["w_gate"][e]).astype(jnp.float32))
+        u = (x_tok @ params["w_up"][e]).astype(jnp.float32)
+        out = ((g * u).astype(x_tok.dtype)) @ params["w_out"][e]
+        return y + w_e[:, None] * out.astype(jnp.float32), None
+
+    y0 = jnp.zeros(x_tok.shape, jnp.float32)
+    y, _ = jax.lax.scan(per_expert, y0, jnp.arange(moe.num_experts))
+    return y.astype(x_tok.dtype), _aux_loss(probs, idx, moe.num_experts)
+
+
+# ---------------------------------------------------------------------------
+# EP via all-to-all (sequence-sharded tokens)
+# ---------------------------------------------------------------------------
+
+def _a2a_quantized(x, ep_axis: str, int8: bool):
+    """all_to_all with optional int8 payload (per-slot scales) — halves the
+    dispatch bytes vs bf16 (DeepSeek-V3-style quantized dispatch)."""
+    if not int8:
+        return jax.lax.all_to_all(x, ep_axis, 0, 0, tiled=False)
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                                keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    rq = jax.lax.all_to_all(q, ep_axis, 0, 0, tiled=False)
+    rs = jax.lax.all_to_all(scale, ep_axis, 0, 0, tiled=False)
+    return (rq.astype(jnp.float32) * rs).astype(x.dtype)
+
+
+def _moe_a2a_local(params, cfg, x_loc, ep_axis: str, n_shards: int,
+                   a2a_int8: bool = False):
+    """Runs on one shard inside shard_map. x_loc: (T_loc, d)."""
+    moe = cfg.moe
+    K = moe.experts_per_token
+    E = moe.num_experts
+    E_loc = E // n_shards
+    T_loc, d = x_loc.shape
+
+    weights, idx, probs = _route(params["router"], x_loc, K)
+    aux = _aux_loss(probs, idx, E)
+
+    # --- dispatch: pack entries per destination shard -----------------------
+    flat_e = idx.reshape(-1)                                   # (T_loc*K,)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.arange(T_loc * K) // K
+    dest = flat_e // E_loc                                     # (T_loc*K,)
+    c_send = _round_up(max(1, int(moe.capacity_factor * T_loc * K / n_shards)), 8)
+    rank = _rank_in_group(dest, n_shards)
+    keep = rank < c_send
+    rank_c = jnp.where(keep, rank, c_send)                     # OOB -> dropped
+
+    send_x = jnp.zeros((n_shards, c_send, d), x_loc.dtype)
+    send_x = send_x.at[dest, rank_c].set(x_loc[flat_tok], mode="drop")
+    send_eid = jnp.full((n_shards, c_send), -1, jnp.int32)
+    send_eid = send_eid.at[dest, rank_c].set(flat_e, mode="drop")
+
+    recv_x = _a2a_quantized(send_x, ep_axis, a2a_int8)
+    recv_eid = jax.lax.all_to_all(send_eid, ep_axis, 0, 0, tiled=False)
+
+    # --- local expert compute ------------------------------------------------
+    rx = recv_x.reshape(-1, d)                                 # (n_shards*c_send, d)
+    re = recv_eid.reshape(-1)
+    valid = re >= 0
+    eloc = jnp.where(valid, re % E_loc, 0)
+    c_exp = _round_up(max(1, int(moe.capacity_factor * rx.shape[0] / E_loc)), 8)
+    erank = _rank_in_group(jnp.where(valid, eloc, E_loc), E_loc + 1)
+    ekeep = valid & (erank < c_exp)
+    erank_c = jnp.where(ekeep, erank, c_exp)
+    xbuf = jnp.zeros((E_loc, c_exp, d), x_loc.dtype)
+    xbuf = xbuf.at[eloc, erank_c].set(rx, mode="drop")
+    ybuf = _expert_ffn(params["w_gate"], params["w_up"], params["w_out"], xbuf)
+    ry = jnp.where(ekeep[:, None], ybuf[eloc, jnp.minimum(erank_c, c_exp - 1)], 0.0)
+
+    # --- return + combine -----------------------------------------------------
+    back = _a2a_quantized(ry.reshape(n_shards, c_send, d).astype(x_loc.dtype),
+                          ep_axis, a2a_int8)
+    y_slot = back[dest, rank_c]                                # (T_loc*K, d)
+    y_slot = jnp.where(keep[:, None], y_slot, 0.0)
+    out = jnp.zeros((T_loc, d), jnp.float32)
+    out = out.at[flat_tok].add(flat_w[:, None] * y_slot.astype(jnp.float32))
+    return out.astype(x_loc.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# EP via token replication + psum (decode)
+# ---------------------------------------------------------------------------
+
+def _moe_allgather_local(params, cfg, x_loc, ep_axis: str, n_shards: int):
+    """Tokens replicated over ep_axis; each shard computes its local experts
+    and partial outputs are psum-combined. x_loc: (T, d)."""
+    moe = cfg.moe
+    K = moe.experts_per_token
+    E = moe.num_experts
+    E_loc = E // n_shards
+    T, d = x_loc.shape
+    shard = jax.lax.axis_index(ep_axis)
+
+    weights, idx, probs = _route(params["router"], x_loc, K)
+    aux = _aux_loss(probs, idx, E)
+
+    flat_e = idx.reshape(-1)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.arange(T * K) // K
+    mine = (flat_e // E_loc) == shard
+    eloc = jnp.where(mine, flat_e % E_loc, E_loc)
+    c_exp = _round_up(max(1, int(moe.capacity_factor * T * K / E)), 8)
+    rank = _rank_in_group(eloc, E_loc + 1)
+    keep = mine & (rank < c_exp)
+    rank_c = jnp.where(keep, rank, c_exp)
+    xbuf = jnp.zeros((E_loc, c_exp, d), x_loc.dtype)
+    xbuf = xbuf.at[eloc, rank_c].set(x_loc[flat_tok], mode="drop")
+    ybuf = _expert_ffn(params["w_gate"], params["w_up"], params["w_out"], xbuf)
+    y_slot = jnp.where(keep[:, None], ybuf[jnp.minimum(eloc, E_loc - 1),
+                                           jnp.minimum(rank_c, c_exp - 1)], 0.0)
+    out = jnp.zeros((T, d), jnp.float32)
+    out = out.at[flat_tok].add(flat_w[:, None] * y_slot.astype(jnp.float32))
+    out = jax.lax.psum(out, ep_axis)
+    return out.astype(x_loc.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+def moe_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                mesh: Mesh | None = None,
+                dp_axes: Sequence[str] = ("data",),
+                ep_axis: str = "model",
+                strategy: str = "auto",
+                a2a_int8: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Adds shared-expert and dense-residual
+    branches per config (these are plain TP-sharded MLPs outside the EP path).
+    """
+    moe = cfg.moe
+    B, S, d = x.shape
+
+    if mesh is None or ep_axis not in mesh.shape or mesh.shape[ep_axis] == 1:
+        y_tok, aux = moe_reference(params, cfg, x.reshape(-1, d))
+        y = y_tok.reshape(B, S, d)
+    else:
+        n_shards = mesh.shape[ep_axis]
+        if strategy == "auto":
+            strategy = "a2a" if S % n_shards == 0 and S >= n_shards else "allgather"
+        expert_specs = {
+            "router": P(),
+            "w_gate": P(ep_axis, None, None),
+            "w_up": P(ep_axis, None, None),
+            "w_out": P(ep_axis, None, None),
+        }
+        ep_params = {k: params[k] for k in expert_specs}
+        all_axes = tuple(dp_axes) + (ep_axis,)
+        if strategy == "a2a":
+            fn = functools.partial(_moe_a2a_local, cfg=cfg, ep_axis=ep_axis,
+                                   n_shards=n_shards, a2a_int8=a2a_int8)
+
+            def wrapper(p, xs):
+                bl, sl, _ = xs.shape
+                y_loc, aux_loc = fn(p, x_loc=xs.reshape(-1, d))
+                return y_loc.reshape(bl, sl, d), jax.lax.pmean(aux_loc, all_axes)
+
+            mapped = shard_map(
+                wrapper, mesh=mesh,
+                in_specs=({k: expert_specs[k] for k in ep_params},
+                          P(tuple(dp_axes), ep_axis, None)),
+                out_specs=(P(tuple(dp_axes), ep_axis, None), P()))
+            y, aux = mapped(ep_params, x)
+        else:
+            fn = functools.partial(_moe_allgather_local, cfg=cfg, ep_axis=ep_axis,
+                                   n_shards=n_shards)
+
+            def wrapper(p, xs):
+                bl, sl, _ = xs.shape
+                y_loc, aux_loc = fn(p, x_loc=xs.reshape(-1, d))
+                return y_loc.reshape(bl, sl, d), jax.lax.pmean(aux_loc, all_axes)
+
+            mapped = shard_map(
+                wrapper, mesh=mesh,
+                in_specs=({k: expert_specs[k] for k in ep_params},
+                          P(tuple(dp_axes), None, None)),
+                out_specs=(P(tuple(dp_axes), None, None), P()))
+            y, aux = mapped(ep_params, x)
+
+    if moe.num_shared_experts:
+        y = y + mlp(params["shared"], x, "swiglu")
+    if moe.dense_residual_d_ff:
+        y = y + mlp(params["dense"], x, cfg.mlp_activation)
+    return y, aux

@@ -1,0 +1,195 @@
+"""RWKV6 (Finch) block — data-dependent per-channel decay time-mix plus
+squared-relu channel-mix.
+
+Per head (hd key channels i, hd value channels j):
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] v_t[j]
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+with w_t = exp(-exp(w0 + lora(x))) in (0,1) — the data-dependent decay that
+distinguishes Finch from RWKV5.
+
+Chunked evaluation (train/prefill): within a chunk the contribution of step s
+to step t>s decays by exp(Lc[t-1] - Lc[s]) per channel (Lc = cumulative log
+decay). We materialize the per-channel decay tensor (every exponent <= 0, so
+exact and stable) and contract; the carried state handles chunk boundaries.
+Decode is the O(1)-state recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # (B, H, hd, hd) f32
+    shift_t: jax.Array    # (B, d) last token (time-mix shift)
+    shift_c: jax.Array    # (B, d) last token (channel-mix shift)
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    n_heads = cfg.d_model // hd
+    return n_heads, hd
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    n_heads, hd = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    lora = cfg.rwkv.decay_lora
+    glora = cfg.rwkv.gate_lora
+    return {
+        # time-mix
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(jnp.float32),
+        "w_r": dense_init(ks[1], d, d, dtype),
+        "w_k": dense_init(ks[2], d, d, dtype),
+        "w_v": dense_init(ks[3], d, d, dtype),
+        "w_g": dense_init(ks[4], d, d, dtype),
+        "w_o": dense_init(ks[5], d, d, dtype),
+        "decay_base": jnp.full((d,), -2.0, jnp.float32),          # w0
+        "decay_a": dense_init(ks[6], d, lora, dtype),
+        "decay_b": (jax.random.normal(ks[7], (lora, d), jnp.float32) * 0.01).astype(jnp.float32),
+        "bonus": jnp.zeros((n_heads, hd), jnp.float32),           # u
+        "ln_scale": jnp.ones((n_heads, hd), jnp.float32),
+        # channel-mix
+        "mu_c": jnp.full((2, d), 0.5, jnp.float32),
+        "w_k_cm": dense_init(ks[8], d, cfg.d_ff, dtype),
+        "w_v_cm": dense_init(ks[9], cfg.d_ff, d, dtype),
+        "w_r_cm": dense_init(ks[10], d, d, dtype),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None):
+    """Token shift: (B, S, d) -> previous token's activation."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _decay(params: Params, xw: jax.Array):
+    """Data-dependent per-channel log-decay (<= 0). xw: (B,S,d) -> f32 (B,S,d)."""
+    lora = jnp.tanh(xw @ params["decay_a"]).astype(jnp.float32) @ params["decay_b"]
+    return -jnp.exp(params["decay_base"] + lora)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, eps: float):
+    """Per-head RMS norm. y: (B,S,H,hd)."""
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale
+
+
+def _wkv_chunked(r, k, v, logw, bonus, chunk: int):
+    """r,k,v: (B,S,H,hd) f32; logw: (B,S,H,hd) <= 0.
+
+    Returns (y (B,S,H,hd) f32, final state (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    L = min(chunk, S)
+    S_pad = ((S + L - 1) // L) * L
+    if S_pad != S:
+        # inert padding: k=0 (no contribution), logw=0 (state preserved)
+        pz = lambda a: jnp.pad(a, [(0, 0), (0, S_pad - S)] + [(0, 0)] * (a.ndim - 2))
+        r, k, v, logw = pz(r), pz(k), pz(v), pz(logw)
+    S_orig, S = S, S_pad
+    nc = S // L
+    rc = r.reshape(B, nc, L, H, hd).swapaxes(0, 1)
+    kc = k.reshape(B, nc, L, H, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nc, L, H, hd).swapaxes(0, 1)
+    wc = logw.reshape(B, nc, L, H, hd).swapaxes(0, 1)
+
+    tri_lower = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])   # s < t strict
+
+    def body(S_in, inp):
+        r_l, k_l, v_l, w_l = inp                               # (B,L,H,hd)
+        lc = jnp.cumsum(w_l, axis=1)                           # (B,L,H,hd) L_t
+        # decay from s to t (strict): exp(L_{t-1} - L_s) = exp(L_t - w_t - L_s)
+        diff = (lc - w_l)[:, :, None] - lc[:, None, :]         # (B,t,s,H,hd)
+        decay = jnp.where(tri_lower[None, :, :, None, None],
+                          jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        # intra-chunk strict-past contribution
+        scores = jnp.einsum("bthi,btshi,bshi->bths", r_l, decay, k_l)
+        y = jnp.einsum("bths,bshj->bthj", scores, v_l)
+        # current-token bonus
+        y += jnp.einsum("bthi,hi,bthi,bthj->bthj", r_l, bonus, k_l, v_l)
+        # carried state: y_t += sum_i r[t,i] exp(L_{t-1})[i] S_in[i,j]
+        rstate = r_l * jnp.exp(lc - w_l)
+        y += jnp.einsum("bthi,bhij->bthj", rstate, S_in)
+        # state update: S_out = diag(exp(L_L)) S_in + sum_s exp(L_L - L_s) k_s v_s
+        rem = jnp.exp(lc[:, -1:] - lc)                         # (B,L,H,hd)
+        S_out = jnp.exp(lc[:, -1])[..., None] * S_in + jnp.einsum(
+            "bshi,bshj->bhij", rem * k_l, v_l)
+        return S_out, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_fin, yc = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    return yc.swapaxes(0, 1).reshape(B, S, H, hd)[:, :S_orig], S_fin
+
+
+def _time_mix_inputs(params, cfg, x, last):
+    xx = _shift(x, last)
+    sx = (xx - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    mixed = xf[None] + params["mu"][:, None, None, :] * sx[None]  # (5,B,S,d)
+    xr, xk, xv, xw, xg = [m.astype(x.dtype) for m in mixed]
+    return xr, xk, xv, xw, xg
+
+
+def rwkv6_time_mix(params: Params, cfg: ModelConfig, x: jax.Array,
+                   state: RWKVState | None = None, return_state: bool = False):
+    B, S, d = x.shape
+    H, hd = _dims(cfg)
+    last = None if state is None else state.shift_t
+    xr, xk, xv, xw, xg = _time_mix_inputs(params, cfg, x, last)
+    r = (xr @ params["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    logw = _decay(params, xw).reshape(B, S, H, hd)
+    S_in = None if state is None else state.wkv
+    if S_in is None:
+        y, S_fin = _wkv_chunked(r, k, v, logw, params["bonus"], chunk=64)
+    else:
+        # continuation path (used by tests): fold carried state step-by-step
+        def step(Sc, inp):
+            r_t, k_t, v_t, w_t = inp
+            y_t = jnp.einsum("bhi,bhij->bhj", r_t, Sc) + (
+                jnp.einsum("bhi,hi,bhi,bhj->bhj", r_t, params["bonus"], k_t, v_t))
+            Sc = jnp.exp(w_t)[..., None] * Sc + jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+            return Sc, y_t
+        S_fin, y = jax.lax.scan(
+            step, S_in,
+            (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), logw.swapaxes(0, 1)))
+        y = y.swapaxes(0, 1)
+    y = _group_norm(y, params["ln_scale"], cfg.norm_eps).reshape(B, S, d)
+    out = (y.astype(x.dtype) * g) @ params["w_o"]
+    if return_state:
+        return out, S_fin, x[:, -1]
+    return out
+
+
+def rwkv6_channel_mix(params: Params, cfg: ModelConfig, x: jax.Array,
+                      state: RWKVState | None = None, return_state: bool = False):
+    last = None if state is None else state.shift_c
+    xx = _shift(x, last)
+    sx = (xx - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xk = (xf + params["mu_c"][0] * sx).astype(x.dtype)
+    xr = (xf + params["mu_c"][1] * sx).astype(x.dtype)
+    vv = jnp.square(jax.nn.relu(xk @ params["w_k_cm"])) @ params["w_v_cm"]
+    out = jax.nn.sigmoid((xr @ params["w_r_cm"]).astype(jnp.float32)).astype(x.dtype) * vv
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    H, hd = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        shift_t=jnp.zeros((batch, d), dt),
+        shift_c=jnp.zeros((batch, d), dt),
+    )

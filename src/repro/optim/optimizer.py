@@ -1,0 +1,170 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and optional
+int8 gradient compression with error feedback — all as pure pytree ops so
+every state leaf can carry a ZeRO-1 PartitionSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    mu: dict          # first moments (f32 — or int8 q with opt_int8)
+    nu: dict          # second moments
+    count: jax.Array  # step counter
+    ef: Optional[dict] = None   # error-feedback residual (grad compression)
+    mu_scale: Optional[dict] = None   # per-tensor f32 scales (opt_int8)
+    nu_scale: Optional[dict] = None
+
+
+def _blocks(shape):
+    """Blockwise-quantization layout: blocks of 128 along the last dim when
+    divisible, else one block per row. Returns (n_blocks, block)."""
+    if not shape:
+        return 1, 1
+    last = shape[-1]
+    block = 128 if last % 128 == 0 else last
+    return last // block, block
+
+
+def _q8(x: jax.Array):
+    """Symmetric BLOCKWISE int8 quantization -> (q, scale). Per-tensor scales
+    diverge on real models (nu spans orders of magnitude); blockwise is the
+    bitsandbytes-style fix."""
+    shape = x.shape
+    nb, block = _blocks(shape)
+    xr = x.reshape(shape[:-1] + (nb, block)) if shape else x.reshape(1, 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(xr), axis=-1, keepdims=True),
+                        1e-20) / 127.0
+    q = jnp.clip(jnp.round(xr / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale.squeeze(-1)
+
+
+def _dq8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    shape = q.shape
+    nb, block = _blocks(shape)
+    qr = q.reshape(shape[:-1] + (nb, block)) if shape else q.reshape(1, 1)
+    out = qr.astype(jnp.float32) * scale[..., None]
+    return out.reshape(shape)
+
+
+def schedule(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(tc.warmup_steps, 1)
+    progress = jnp.clip((step - tc.warmup_steps)
+                        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cosine = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * progress))
+    return tc.learning_rate * jnp.where(step < tc.warmup_steps, warm, cosine)
+
+
+def init(params, tc: TrainConfig) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if tc.opt_int8:
+        zq = lambda p: jnp.zeros(p.shape, jnp.int8)
+
+        def zs(p):
+            nb, _ = _blocks(p.shape)
+            return jnp.zeros(p.shape[:-1] + (nb,) if p.shape else (1, 1),
+                             jnp.float32)
+
+        return AdamState(
+            mu=jax.tree_util.tree_map(zq, params),
+            nu=jax.tree_util.tree_map(zq, params),
+            count=jnp.zeros((), jnp.int32),
+            ef=None,
+            mu_scale=jax.tree_util.tree_map(zs, params),
+            nu_scale=jax.tree_util.tree_map(zs, params),
+        )
+    state = AdamState(
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+        ef=(jax.tree_util.tree_map(zeros, params)
+            if tc.grad_compression == "int8_ef" else None),
+    )
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def compress_int8(g: jax.Array, ef: jax.Array):
+    """Symmetric int8 quantization with error feedback: the all-reduce moves
+    1/4 the bytes; the residual re-enters next step (convergence-preserving)."""
+    gf = g.astype(jnp.float32) + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def update(grads, state: AdamState, params, tc: TrainConfig, step: jax.Array):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if tc.grad_compression == "int8_ef" and state.ef is not None:
+        pairs = jax.tree_util.tree_map(compress_int8, grads, state.ef)
+        grads = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree_util.tree_map(lambda pr: pr[1], pairs,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_ef = state.ef
+
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    count = state.count + 1
+    lr = schedule(tc, step)
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def core(p, gf, m, v):
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8)
+        if p.ndim >= 2:                     # decoupled weight decay on matrices
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    is_tup = lambda x: isinstance(x, tuple)
+    if tc.opt_int8:
+        # 8-bit Adam: moments stored int8 + blockwise scales (4x less HBM
+        # residency and traffic — the 1T-param fit enabler). nu is quantized
+        # in sqrt space (halves its dynamic range in log scale).
+        def upd(p, g, mq, ms, vq, vs):
+            v_prev = jnp.square(_dq8(vq, vs))
+            newp, m, v = core(p, g.astype(jnp.float32), _dq8(mq, ms), v_prev)
+            mq2, ms2 = _q8(m)
+            vq2, vs2 = _q8(jnp.sqrt(v))
+            return newp, mq2, ms2, vq2, vs2
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu,
+                                     state.mu_scale, state.nu, state.nu_scale)
+        pick = lambda i: jax.tree_util.tree_map(lambda t: t[i], out, is_leaf=is_tup)
+        new_state = AdamState(mu=pick(1), nu=pick(3), count=count, ef=new_ef,
+                              mu_scale=pick(2), nu_scale=pick(4))
+        return pick(0), new_state, {"grad_norm": gnorm, "lr": lr}
+
+    out = jax.tree_util.tree_map(
+        lambda p, g, m, v: core(p, g.astype(jnp.float32), m, v),
+        params, grads, state.mu, state.nu)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_tup)
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_tup)
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is_tup)
+    new_state = AdamState(mu=new_mu, nu=new_nu, count=count, ef=new_ef)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop.
+
+Features (the large-scale-runnability contract):
+* auto-resume from the latest committed checkpoint (params, opt state, step);
+* periodic async checkpointing + final checkpoint on exception/SIGTERM;
+* deterministic-by-step data (any host can recompute any batch — restart or
+  work-steal without data-state handoff);
+* straggler monitor: EWMA of step time, flags steps > ``straggler_factor`` x
+  the running mean (on real multi-host this feeds the rebalance/eviction
+  policy; here it logs and counts);
+* preemption simulation hook for tests (``preempt_at``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import pipeline
+from repro.dist import sharding, steps as steps_mod
+from repro.models import lm
+from repro.optim import optimizer
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_done: int
+    final_loss: float
+    resumed_from: Optional[int]
+    straggler_steps: int
+    step_times: list
+
+
+class PreemptionError(RuntimeError):
+    pass
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, mesh, *, seq_len: int,
+          global_batch: int, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, log_every: int = 10,
+          straggler_factor: float = 3.0,
+          preempt_at: Optional[int] = None,
+          on_metrics: Optional[Callable] = None) -> TrainerReport:
+    step_fn, pspecs, ospecs = steps_mod.make_train_step(cfg, mesh, tc)
+    p_sh = sharding.named(mesh, pspecs)
+    o_sh = sharding.named(mesh, ospecs)
+
+    with mesh:
+        params = jax.jit(
+            lambda: lm.init_params(jax.random.PRNGKey(tc.seed), cfg),
+            out_shardings=p_sh)()
+        opt_state = jax.jit(lambda p: optimizer.init(p, tc),
+                            out_shardings=o_sh)(params)
+
+    start_step, resumed_from = 0, None
+    if ckpt_dir is not None:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            params = ckpt.restore(ckpt_dir, latest, params, p_sh)
+            opt_state = ckpt.restore(ckpt_dir + "/opt", latest, opt_state, o_sh)
+            start_step, resumed_from = latest, latest
+
+    dc = pipeline.data_config_for(cfg, seq_len, global_batch, tc.seed)
+    ewma, stragglers, times = None, 0, []
+    save_thread = None
+    final_loss = float("nan")
+    interrupted = {"flag": False}
+
+    def _sigterm(*_):
+        interrupted["flag"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, _sigterm)
+    step = start_step
+    try:
+        with mesh:
+            while step < tc.total_steps:
+                if preempt_at is not None and step == preempt_at:
+                    raise PreemptionError(f"simulated preemption at {step}")
+                batch_np = pipeline.make_batch(dc, step)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                t0 = time.perf_counter()
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.asarray(step))
+                final_loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                times.append(dt)
+                if ewma is not None and dt > straggler_factor * ewma:
+                    stragglers += 1
+                    print(f"[straggler] step {step}: {dt:.3f}s vs EWMA {ewma:.3f}s")
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+                if log_every and step % log_every == 0:
+                    print(f"step {step}: loss={final_loss:.4f} "
+                          f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+                step += 1
+                if ckpt_dir is not None and step % ckpt_every == 0:
+                    if save_thread is not None:
+                        save_thread.join()
+                    ckpt.save(ckpt_dir, step, params, blocking=True)
+                    save_thread = ckpt.save(ckpt_dir + "/opt", step, opt_state,
+                                            blocking=False)
+                if interrupted["flag"]:
+                    raise PreemptionError("SIGTERM")
+    except PreemptionError:
+        if ckpt_dir is not None:
+            if save_thread is not None:
+                save_thread.join()
+            ckpt.save(ckpt_dir, step, params, blocking=True)
+            ckpt.save(ckpt_dir + "/opt", step, opt_state, blocking=True)
+        raise
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+        if save_thread is not None:
+            save_thread.join()
+
+    if ckpt_dir is not None:
+        ckpt.save(ckpt_dir, step, params, blocking=True)
+        ckpt.save(ckpt_dir + "/opt", step, opt_state, blocking=True)
+        ckpt.garbage_collect(ckpt_dir)
+    return TrainerReport(steps_done=step - start_step, final_loss=final_loss,
+                         resumed_from=resumed_from, straggler_steps=stragglers,
+                         step_times=times)

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see one device; multi-device tests spawn subprocesses that set the flag
+before importing jax."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(script: str, n_devices: int = 8, timeout: int = 900):
+    """Run a python snippet in a subprocess with n fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_multidevice

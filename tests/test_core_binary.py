@@ -1,0 +1,52 @@
+"""Property tests: packing roundtrip, Hamming path agreement, metric axioms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binary
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _bits(rng, n, d):
+    return jnp.asarray(rng.integers(0, 2, size=(n, d)), jnp.uint8)
+
+
+@given(st.integers(1, 40), st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(n, d, seed):
+    rng = np.random.default_rng(seed)
+    bits = _bits(rng, n, d)
+    assert (binary.unpack_bits(binary.pack_bits(bits), d) == bits).all()
+
+
+@given(st.integers(1, 12), st.integers(1, 60), st.integers(1, 257),
+       st.integers(0, 2**31 - 1))
+def test_hamming_paths_agree(q, n, d, seed):
+    rng = np.random.default_rng(seed)
+    qb, xb = _bits(rng, q, d), _bits(rng, n, d)
+    ref = binary.hamming_ref(qb, xb)
+    assert (binary.hamming_xor(binary.pack_bits(qb), binary.pack_bits(xb)) == ref).all()
+    assert (binary.hamming_mxu(qb, xb, d) == ref).all()
+
+
+@given(st.integers(1, 20), st.integers(1, 128), st.integers(0, 2**31 - 1))
+def test_metric_axioms(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _bits(rng, n, d)
+    xp = binary.pack_bits(x)
+    dist = binary.hamming_xor(xp, xp)
+    assert (jnp.diag(dist) == 0).all()                       # identity
+    assert (dist == dist.T).all()                            # symmetry
+    assert (dist >= 0).all() and (dist <= d).all()           # bounded domain
+    # triangle inequality on a sample
+    if n >= 3:
+        i, j, k = 0, n // 2, n - 1
+        assert int(dist[i, k]) <= int(dist[i, j]) + int(dist[j, k])
+
+
+def test_mxu_exact_at_256_bits():
+    rng = np.random.default_rng(0)
+    qb, xb = _bits(rng, 64, 256), _bits(rng, 512, 256)
+    assert (binary.hamming_mxu(qb, xb) == binary.hamming_ref(qb, xb)).all()

@@ -1,0 +1,30 @@
+"""Statistical activation reduction accuracy model (paper Fig. 11)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hierarchy
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+@given(st.integers(2, 32), st.integers(2, 128))
+def test_bound_dominates_monte_carlo(k, r):
+    kprime = max(1, k // 4)
+    bound = hierarchy.failure_bound(k, r, kprime)
+    mc = hierarchy.failure_exact_mc(k, r, kprime, trials=2000)
+    assert bound >= mc - 0.03
+
+
+@given(st.integers(2, 32), st.integers(2, 64))
+def test_failure_decreases_in_kprime(k, r):
+    probs = [hierarchy.failure_bound(k, r, kp) for kp in range(1, k + 1)]
+    assert all(a >= b - 1e-12 for a, b in zip(probs, probs[1:]))
+    assert probs[-1] == 0.0          # k'=k is exact
+
+
+def test_recommended_kprime_meets_target():
+    k, r = 16, 64
+    kp = hierarchy.recommended_kprime(k, r, max_failure=0.01)
+    assert hierarchy.failure_bound(k, r, kp) <= 0.01
+    assert kp < k                    # reduction is actually possible
+    assert hierarchy.bandwidth_reduction(1024, kp) > 100

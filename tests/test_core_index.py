@@ -1,0 +1,62 @@
+"""Spatial indexes: recall floors vs exact scan on clustered data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binary, engine, index
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(8, 64)) * 5
+    x = (centers[rng.integers(0, 8, 3000)] + rng.normal(size=(3000, 64))).astype(np.float32)
+    bits = (x > 0).astype(np.uint8)
+    codes = binary.pack_bits(jnp.asarray(bits))
+    q = jnp.asarray(x[:32])
+    q_codes = binary.pack_bits(jnp.asarray(bits[:32]))
+    exact_d, exact_i = engine.search_chunked(codes, q_codes, 10, 64)
+    return x, codes, q, q_codes, exact_i
+
+
+def _recall(ids, exact):
+    return float(jnp.mean(jnp.any(jnp.asarray(ids)[:, :, None] ==
+                                  exact[:, None, :], axis=1)))
+
+
+def test_kmeans_index_recall(clustered):
+    x, codes, q, q_codes, exact = clustered
+    km = index.kmeans_build(jnp.asarray(x), codes, 64, 16, iters=8)
+    _, ids = index.kmeans_search(km, q, q_codes, 10, nprobe=4)
+    assert _recall(ids, exact) > 0.6
+
+
+def test_kmeans_nprobe_monotone(clustered):
+    """More probes -> no worse recall; probing everything recovers the exact
+    *distances* (ids can differ inside Hamming tie groups)."""
+    x, codes, q, q_codes, exact = clustered
+    km = index.kmeans_build(jnp.asarray(x), codes, 64, 16, iters=8,
+                            capacity_factor=8.0)
+    recalls = []
+    for nprobe in (1, 4, 16):
+        dd, ids = index.kmeans_search(km, q, q_codes, 10, nprobe=nprobe)
+        recalls.append(_recall(ids, exact))
+    assert recalls[0] <= recalls[1] + 0.02 <= recalls[2] + 0.04
+    exact_d, _ = engine.search_chunked(codes, q_codes, 10, 64)
+    dd, _ = index.kmeans_search(km, q, q_codes, 10, nprobe=16)
+    assert (jnp.asarray(dd) == exact_d).all()    # all buckets == exact scan
+
+
+def test_lsh_index_recall(clustered):
+    x, codes, q, q_codes, exact = clustered
+    lsh = index.lsh_build(codes, 64, n_tables=8, bits_per_table=4)
+    _, ids = index.lsh_search(lsh, q_codes, 10)
+    assert _recall(ids, exact) > 0.25
+
+
+def test_kdtree_index_recall(clustered):
+    x, codes, q, q_codes, exact = clustered
+    kt = index.KDTreeIndex(x, codes, 64, n_trees=4, leaf_size=256)
+    _, ids = kt.search(np.asarray(q), q_codes, 10)
+    assert _recall(ids, exact) > 0.5

@@ -1,0 +1,55 @@
+"""Counting-select (temporal-sort analogue) vs sorted oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 8), st.integers(1, 400), st.integers(1, 32),
+       st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_counting_topk_matches_oracle(q, n, k, d_max, seed):
+    rng = np.random.default_rng(seed)
+    dist = jnp.asarray(rng.integers(0, d_max + 1, size=(q, n)), jnp.int32)
+    rd, ri = topk.topk_ref(dist, min(k, n))
+    for fn in (topk.counting_topk, topk.counting_topk_bisect,
+               topk.composite_topk):
+        cd, ci = fn(dist, min(k, n), d_max)
+        assert (rd == cd[:, :min(k, n)]).all(), fn.__name__
+        # identical tie-break (index order) across all three selects
+        assert (ri == ci[:, :min(k, n)]).all(), fn.__name__
+
+
+@given(st.integers(1, 4), st.integers(2, 50), st.integers(1, 10),
+       st.integers(0, 2**31 - 1))
+def test_merge_is_topk_of_union(q, n, k, seed):
+    rng = np.random.default_rng(seed)
+    d_max = 64
+    d1 = jnp.asarray(rng.integers(0, d_max, (q, n)), jnp.int32)
+    d2 = jnp.asarray(rng.integers(0, d_max, (q, n)), jnp.int32)
+    a_d, a_i = topk.counting_topk(d1, min(k, n), d_max)
+    b_d, b_i = topk.counting_topk(d2, min(k, n), d_max)
+    md, _ = topk.merge_topk(a_d, a_i, b_d, b_i + n, min(k, n))
+    full = jnp.concatenate([d1, d2], axis=1)
+    fd, _ = topk.topk_ref(full, min(k, n))
+    assert (md == fd).all()
+
+
+def test_counting_topk_k_larger_than_n():
+    dist = jnp.asarray([[3, 1, 2]], jnp.int32)
+    cd, ci = topk.counting_topk(dist, 5, 8)
+    assert list(cd[0][:3]) == [1, 2, 3]
+    assert (cd[0][3:] == 9).all()                # sentinel d_max+1
+    assert (ci[0][3:] == 3).all()                # sentinel id n
+
+
+def test_bucketed_topk_recovers_exact_when_separated():
+    vals = jnp.asarray(np.random.default_rng(0).normal(size=(4, 256)), jnp.float32)
+    bv, bi = topk.bucketed_topk(vals, 4, n_bins=4096)
+    tv, ti = jax.lax.top_k(vals, 4)
+    assert (bi == ti).all()
+    np.testing.assert_allclose(np.asarray(bv), np.asarray(tv), rtol=1e-6)

@@ -1,0 +1,30 @@
+"""CI-scale dry-run: lower + compile FULL configs on a small fake mesh in a
+subprocess (proves the 512-chip path's sharding logic end-to-end)."""
+import pytest
+
+pytestmark = pytest.mark.slow
+
+
+def test_dryrun_cells_on_host_mesh(multidevice):
+    multidevice("""
+import jax
+from repro import compat
+from repro.launch import dryrun
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+for arch, shape in [("gemma-2b", "train_4k"), ("rwkv6-1.6b", "long_500k"),
+                    ("musicgen-medium", "decode_32k")]:
+    rec = dryrun.run_cell(arch, shape, mesh=mesh)
+    assert rec["flops_per_device"] > 0, (arch, shape)
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    print(arch, shape, rec["dominant"], "OK")
+""", n_devices=8, timeout=1200)
+
+
+def test_input_specs_cover_all_runnable_cells():
+    from repro.configs import ALL_ARCHS, get_config, get_shape, runnable_cells
+    from repro.launch.specs import input_specs
+    cells, skipped = runnable_cells([get_config(a) for a in ALL_ARCHS])
+    assert len(cells) == 32 and len(skipped) == 8
+    for arch, shape in cells:
+        args = input_specs(get_config(arch), get_shape(shape))
+        assert len(args) >= 2

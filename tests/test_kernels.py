@@ -1,0 +1,75 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU): shape sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 128, 1), (16, 300, 2), (128, 2048, 8), (7, 100, 4),
+          (1, 5000, 8), (33, 999, 3), (64, 64, 6)]
+
+
+def _codes(seed, n, w, dtype):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2**31 - 1, size=(n, w), dtype=np.int64)
+    return jnp.asarray(a, dtype)
+
+
+@pytest.mark.parametrize("q,n,w", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.uint32])
+def test_hamming_distance_kernel(q, n, w, dtype):
+    qp, xp = _codes(0, q, w, dtype), _codes(1, n, w, dtype)
+    out = ops.hamming_distance(qp, xp)
+    expect = ref.hamming_distance_ref(qp.astype(jnp.int32), xp.astype(jnp.int32))
+    assert out.dtype == jnp.int32
+    assert (out == expect).all()
+
+
+@pytest.mark.parametrize("q,n,w", SHAPES)
+def test_hamming_hist_kernel(q, n, w):
+    qp, xp = _codes(2, q, w, jnp.int32), _codes(3, n, w, jnp.int32)
+    bins = w * 32 + 1
+    out = ops.hamming_hist(qp, xp, bins)
+    expect = ref.hamming_hist_ref(qp, xp, bins)
+    assert (out == expect).all()
+    assert int(out.sum()) == q * n           # every pair lands in one bin
+
+
+def test_hist_then_radius_select_equals_topk():
+    """Two-pass temporal-sort: kernel histogram -> radius -> emit == oracle."""
+    from repro.core import binary, topk
+    rng = np.random.default_rng(4)
+    d, n, q, k = 128, 4096, 8, 16
+    xb = jnp.asarray(rng.integers(0, 2, (n, d)), jnp.uint8)
+    qb = jnp.asarray(rng.integers(0, 2, (q, d)), jnp.uint8)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    hist = ops.hamming_hist(qp.astype(jnp.int32), xp.astype(jnp.int32), d + 1)
+    cum = jnp.cumsum(hist, axis=1)
+    r_star = jnp.argmax(cum >= k, axis=1)
+    dist = binary.hamming_ref(qb, xb)
+    rd, _ = topk.topk_ref(dist, k)
+    assert (r_star == rd[:, -1]).all()       # radius == k-th smallest distance
+
+
+@pytest.mark.parametrize("shape", [(2, 256, 4, 2, 64, 64, 64),
+                                   (2, 256, 4, 2, 64, 128, 64),
+                                   (1, 192, 4, 4, 64, 64, 128),
+                                   (2, 200, 2, 1, 32, 64, 64)])
+def test_flash_attention_kernel(shape):
+    """Pallas flash fwd vs the XLA blockwise oracle (exact in f32)."""
+    from repro.kernels import ops
+    from repro.models import attention
+    B, S, H, KV, hd, bq, bk = shape
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd), jnp.float32)
+    truth = attention.blockwise_causal_attention(q, k, v, chunk=64)
+    out = ops.flash_attention(q, k, v, bq=bq, bk=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth),
+                               atol=3e-6, rtol=1e-5)
+    # bf16 within quantization error of the f32 truth
+    ob = ops.flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                             v.astype(jnp.bfloat16), bq=bq, bk=bk)
+    assert float(jnp.max(jnp.abs(ob.astype(jnp.float32) - truth))) < 0.05

@@ -1,0 +1,119 @@
+"""Layer-level oracles: chunked scans == sequential recurrences; blockwise
+attention == naive; MoE reference mass conservation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.models import attention, lm, mamba2, moe, rwkv6
+from repro.models.layers import apply_rope
+
+
+def test_blockwise_attention_matches_naive():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 96, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd), jnp.float32)
+
+    # naive causal GQA
+    kk = jnp.repeat(k, H // KV, axis=2)
+    vv = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhk,bshk->bhqs", q * hd ** -0.5, kk)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    naive = jnp.einsum("bhqs,bshk->bqhk", jax.nn.softmax(s, -1), vv)
+
+    for causal_skip in (False, True):
+        out = attention.blockwise_causal_attention(
+            q, k, v, chunk=32, causal_skip=causal_skip)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(naive),
+                                   atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 32, 128])
+def test_ssd_chunked_equals_sequential(chunk):
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, N = 2, 50, 3, 8, 4
+    x = jax.random.normal(key, (B, S, H, P))
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, S, N))
+    c = jax.random.normal(jax.random.PRNGKey(2), (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (B, S, H)))
+    a_log = jnp.zeros((H,))
+
+    y, h_fin = mamba2._ssd_chunked(x, b, c, dt, a_log, chunk)
+
+    # sequential recurrence oracle
+    a = -jnp.exp(a_log)
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        at = jnp.exp(dt[:, t] * a)                            # (B,H)
+        h = h * at[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], b[:, t], x[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", c[:, t], h))
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_fin), np.asarray(h), atol=1e-4,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [8, 64])
+def test_wkv_chunked_equals_sequential(chunk):
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 2, 40, 2, 8
+    r = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    logw = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (B, S, H, hd)))
+    u = jax.random.normal(jax.random.PRNGKey(4), (H, hd)) * 0.1
+
+    y, s_fin = rwkv6._wkv_chunked(r, k, v, logw, u, chunk)
+
+    S_state = jnp.zeros((B, H, hd, hd))
+    ys = []
+    for t in range(S):
+        y_t = jnp.einsum("bhi,bhij->bhj", r[:, t], S_state) + jnp.einsum(
+            "bhi,hi,bhi,bhj->bhj", r[:, t], u, k[:, t], v[:, t])
+        S_state = jnp.exp(logw[:, t])[..., None] * S_state + jnp.einsum(
+            "bhi,bhj->bhij", k[:, t], v[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(S_state),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_moe_reference_weight_mass():
+    cfg = dataclasses.replace(scaled_down(get_config("kimi-k2-1t-a32b")),
+                              dtype="float32")
+    params = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model)) * 0.1
+    w, idx, probs = moe._route(params["router"], x, cfg.moe.experts_per_token)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+    assert (idx >= 0).all() and (idx < cfg.moe.num_experts).all()
+    aux = moe._aux_loss(probs, idx, cfg.moe.num_experts)
+    assert float(aux) >= 1.0 - 1e-3              # >= 1 by Cauchy-Schwarz
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), 10000.0)
+        kn = apply_rope(k, jnp.asarray([[n]]), 10000.0)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4

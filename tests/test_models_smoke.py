@@ -1,0 +1,61 @@
+"""Per-arch smoke: reduced config of the same family, one forward + one
+train step on CPU; asserts output shapes and finiteness (no NaNs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.models import frontends, lm
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = scaled_down(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    B, S = 2, 64
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend != "none":
+        batch["prefix_emb"] = frontends.synthetic_prefix(cfg, B)
+
+    logits, aux = lm.forward(params, cfg, batch["tokens"], batch.get("prefix_emb"))
+    assert logits.shape == (B, S + cfg.frontend_positions, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    (loss, metrics), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+        params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert gnorm > 0 and jnp.isfinite(gnorm)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_matches_pytree(arch):
+    cfg = scaled_down(get_config(arch))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    actual = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    assert lm.param_count(cfg) == actual
+    if cfg.moe is not None:
+        assert lm.param_count(cfg, active_only=True) < actual
+
+
+def test_full_config_param_counts_sane():
+    """Full (not reduced) configs match their nameplates within tolerance."""
+    expectations = {
+        "internlm2-20b": (20e9, 0.15),
+        "deepseek-67b": (67e9, 0.15),
+        "gemma-2b": (2.5e9, 0.25),
+        "granite-20b": (20e9, 0.15),
+        "kimi-k2-1t-a32b": (1.0e12, 0.15),
+        "arctic-480b": (480e9, 0.15),
+        "rwkv6-1.6b": (1.6e9, 0.25),
+    }
+    for arch, (target, tol) in expectations.items():
+        n = lm.param_count(get_config(arch))
+        assert abs(n - target) / target < tol, (arch, n, target)
+    active = lm.param_count(get_config("kimi-k2-1t-a32b"), active_only=True)
+    assert abs(active - 32e9) / 32e9 < 0.35, active
