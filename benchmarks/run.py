@@ -1,9 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only fig4]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4] [--json PATH]
+
+``--json PATH`` additionally writes the rows machine-readable (list of
+{name, us_per_call, derived:{...}} objects) so the perf trajectory is
+diffable across PRs; CI names these BENCH_<tag>.json.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -22,10 +27,36 @@ BENCHES = [
 ]
 
 
+def _parse_row(line: str) -> dict:
+    """'name,123.4,qps=10;speedup=2.0x' -> structured record. Lines that
+    don't follow the row() shape are kept raw rather than failing the run."""
+    try:
+        name, us, derived = line.split(",", 2)
+        fields = {}
+        for part in filter(None, derived.split(";")):
+            key, _, val = part.partition("=")
+            try:
+                fields[key] = float(val.rstrip("x"))
+            except ValueError:
+                fields[key] = val
+        return {"name": name, "us_per_call": float(us), "derived": fields}
+    except ValueError:
+        return {"raw": line}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON list to PATH")
     args = ap.parse_args()
+
+    rows = []
+
+    def report(line: str) -> None:
+        print(line, flush=True)
+        if args.json:
+            rows.append(_parse_row(line))
 
     print("name,us_per_call,derived")
     failed = []
@@ -33,10 +64,14 @@ def main() -> None:
         if args.only and args.only not in tag:
             continue
         try:
-            mod.run(print)
+            mod.run(report)
         except Exception:  # noqa: BLE001
             failed.append(tag)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

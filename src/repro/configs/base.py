@@ -72,6 +72,9 @@ class RetrievalConfig:
     local_k: int = 4               # k' for hierarchical (statistical) reduction
     interpolation: float = 0.25    # lambda for kNN-LM mixing
     chunk_size: int = 1 << 16      # per-device scan chunk ("board capacity")
+    # top-k select path: "auto" | "counting" | "bisect" | "fused"
+    # (see DESIGN.md decision table); orthogonal to the distance method
+    select: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

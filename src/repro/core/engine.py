@@ -54,7 +54,10 @@ def search_chunked(codes_packed: jax.Array, q_packed: jax.Array, k: int,
     """Scan the dataset in chunks. codes: (N, W) uint32, q: (Q, W).
 
     ``select``: 'auto' (composite-key fast path), 'counting' (histogram
-    counting select), or 'bisect' (scatter-free counting select).
+    counting select), 'bisect' (scatter-free counting select), or 'fused'
+    (two-pass Pallas counting select — the chunk's (Q, chunk) distance
+    matrix is never materialized; orthogonal to ``method``, which it
+    ignores). All four produce bit-identical results.
     Returns (dists (Q,k) ascending, global ids (Q,k))."""
     N, W = codes_packed.shape
     Q = q_packed.shape[0]
@@ -66,26 +69,41 @@ def search_chunked(codes_packed: jax.Array, q_packed: jax.Array, k: int,
     if N % chunk:
         pad = n_chunks * chunk - N
         # pad with all-ones codes at max distance; ids beyond N are masked by
-        # their distance landing at the back of the merge
+        # their distance landing at the back of the merge (the fused kernel
+        # masks them exactly via n_valid instead)
         codes_packed = jnp.pad(codes_packed, ((0, pad), (0, 0)),
                                constant_values=jnp.uint32(0xFFFFFFFF))
     chunks = codes_packed.reshape(n_chunks, chunk, W)
 
-    select_fn = {"auto": topk.composite_topk, "counting": topk.counting_topk,
-                 "bisect": topk.counting_topk_bisect}[select]
+    if select == "fused":
+        from repro.kernels import ops
 
-    def body(carry, xs):
-        best_d, best_i = carry
-        ci, codes_c = xs
-        dist = _distances(q_packed, codes_c, d, method)
-        # padding rows (global id >= N) must rank strictly last — their
-        # all-ones codes can otherwise tie or beat real rows
-        gids = ci * chunk + jnp.arange(chunk)
-        dist = jnp.where(gids[None, :] < N, jnp.minimum(dist, d), d + 1)
-        cd, cidx = select_fn(dist, min(k, chunk), d + 1)
-        cids = cidx + ci * chunk
-        best_d, best_i = topk.merge_topk(best_d, best_i, cd, cids, k)
-        return (best_d, best_i), None
+        def body(carry, xs):
+            best_d, best_i = carry
+            ci, codes_c = xs
+            n_valid = jnp.clip(N - ci * chunk, 0, chunk)
+            cd, cidx = ops.hamming_topk(q_packed, codes_c, min(k, chunk),
+                                        d + 1, n_valid=n_valid)
+            best_d, best_i = topk.merge_topk(best_d, best_i, cd,
+                                             cidx + ci * chunk, k)
+            return (best_d, best_i), None
+    else:
+        select_fn = {"auto": topk.composite_topk,
+                     "counting": topk.counting_topk,
+                     "bisect": topk.counting_topk_bisect}[select]
+
+        def body(carry, xs):
+            best_d, best_i = carry
+            ci, codes_c = xs
+            dist = _distances(q_packed, codes_c, d, method)
+            # padding rows (global id >= N) must rank strictly last — their
+            # all-ones codes can otherwise tie or beat real rows
+            gids = ci * chunk + jnp.arange(chunk)
+            dist = jnp.where(gids[None, :] < N, jnp.minimum(dist, d), d + 1)
+            cd, cidx = select_fn(dist, min(k, chunk), d + 1)
+            cids = cidx + ci * chunk
+            best_d, best_i = topk.merge_topk(best_d, best_i, cd, cids, k)
+            return (best_d, best_i), None
 
     init = (jnp.full((Q, k), d + 1, jnp.int32), jnp.full((Q, k), N, jnp.int32))
     (bd, bi), _ = jax.lax.scan(body, init, (jnp.arange(n_chunks), chunks))
@@ -103,8 +121,9 @@ class KNNEngine(NamedTuple):
         return self.codes.shape[0]
 
     def search(self, q_packed: jax.Array, k: int, chunk: int = 1 << 16,
-               method: str = DistanceMethod.XOR):
-        return search_chunked(self.codes, q_packed, k, self.d, chunk, method)
+               method: str = DistanceMethod.XOR, select: str = "auto"):
+        return search_chunked(self.codes, q_packed, k, self.d, chunk, method,
+                              select=select)
 
 
 # ---------------------------------------------------------------------------
@@ -113,7 +132,8 @@ class KNNEngine(NamedTuple):
 
 def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
                    mesh: Mesh, axes: Sequence[str], k_local: Optional[int] = None,
-                   chunk: int = 1 << 16, method: str = DistanceMethod.XOR):
+                   chunk: int = 1 << 16, method: str = DistanceMethod.XOR,
+                   select: str = "auto"):
     """Datastore sharded over ``axes`` (cardinality sharding); queries
     replicated. Each shard reports its local top-k' and the merge runs over
     the gathered (devices * k') candidates.
@@ -135,7 +155,7 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
         for a in axes:
             flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
         ld, li = search_chunked(codes_loc, q, k_local, d, chunk, method,
-                                id_offset=flat * n_loc)
+                                id_offset=flat * n_loc, select=select)
         # hierarchical merge: gather only k' candidates per shard
         gd = jax.lax.all_gather(ld, axes, tiled=False)   # (n_dev, Q, k')
         gi = jax.lax.all_gather(li, axes, tiled=False)

@@ -117,7 +117,12 @@ def lsh_build(codes: jax.Array, d: int, n_tables: int = 4, bits_per_table: int =
               capacity_factor: float = 4.0, key=None) -> LSHIndex:
     key = key if key is not None else jax.random.PRNGKey(1)
     n = codes.shape[0]
-    bit_ids = jax.random.randint(key, (n_tables, bits_per_table), 0, d, jnp.int32)
+    assert bits_per_table <= d, (bits_per_table, d)
+    # sample bits WITHOUT replacement per table: a duplicate bit id would
+    # hash on fewer than b distinct bits and silently lose key entropy
+    bit_ids = jnp.stack([
+        jax.random.choice(kt, d, (bits_per_table,), replace=False)
+        for kt in jax.random.split(key, n_tables)]).astype(jnp.int32)
     keys = np.asarray(_hash_codes(binary.unpack_bits(codes, d), bit_ids))
     n_buckets = 1 << bits_per_table
     cap = int(np.ceil(capacity_factor * n / n_buckets))

@@ -53,17 +53,24 @@ def synthetic_datastore(cfg: ModelConfig, n: Optional[int] = None, key=None) -> 
 def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
                vocab: int, mesh: Optional[Mesh] = None,
                axes: Sequence[str] = (), method: str = "xor",
-               temperature: float = 8.0) -> jax.Array:
-    """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab)."""
+               temperature: float = 8.0,
+               select: Optional[str] = None) -> jax.Array:
+    """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab).
+
+    ``select`` overrides rcfg.select (the top-k path; "fused" streams the
+    datastore through the two-pass Pallas kernels without ever
+    materializing distances)."""
+    select = rcfg.select if select is None else select
     q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
     if mesh is not None and axes:
         dists, ids = engine.search_sharded(
             store.codes, q_codes, rcfg.k, rcfg.code_bits, mesh, axes,
-            k_local=rcfg.local_k, chunk=rcfg.chunk_size, method=method)
+            k_local=rcfg.local_k, chunk=rcfg.chunk_size, method=method,
+            select=select)
     else:
         dists, ids = engine.search_chunked(
             store.codes, q_codes, rcfg.k, rcfg.code_bits,
-            chunk=rcfg.chunk_size, method=method)
+            chunk=rcfg.chunk_size, method=method, select=select)
     ids = jnp.minimum(ids, store.values.shape[0] - 1)
     neighbor_tokens = store.values[ids]                          # (Q, k)
     w = jax.nn.softmax(-dists.astype(jnp.float32) / temperature, axis=-1)

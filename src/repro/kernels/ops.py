@@ -3,17 +3,19 @@
 On CPU (this container) kernels execute with ``interpret=True`` — the kernel
 body runs faithfully in Python/XLA for correctness validation; on TPU the
 same calls compile to Mosaic. Shapes are padded to block multiples here so
-the kernels stay assert-simple.
+the kernels stay assert-simple; padded dataset rows are masked exactly
+inside the kernels by the ``n_valid`` scalar. Block shapes come from the
+shared heuristic in kernels/tuning.py unless explicitly overridden.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, tuning
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.hamming import hamming_distance_pallas
-from repro.kernels.topk_select import hamming_hist_pallas
+from repro.kernels.topk_select import hamming_emit_pallas, hamming_hist_pallas
 
 
 def _interpret() -> bool:
@@ -32,38 +34,103 @@ def _pad_rows(a: jax.Array, target: int, fill: int = 0) -> jax.Array:
 
 
 def hamming_distance(q_packed: jax.Array, x_packed: jax.Array,
-                     bq: int = 128, bn: int = 512) -> jax.Array:
+                     bq: int | None = None,
+                     bn: int | None = None) -> jax.Array:
     """(Q, W) x (N, W) packed -> (Q, N) int32 (Pallas on TPU, interpreted on
     CPU). Arbitrary Q/N; padding handled here."""
-    Q, N = q_packed.shape[0], x_packed.shape[0]
-    bq = min(bq, _round_up(Q, 8))
-    bn = min(bn, _round_up(N, 128))
+    Q, W = q_packed.shape
+    N = x_packed.shape[0]
+    hbq, hbn = tuning.distance_blocks(Q, N, W)
+    bq, bn = bq or hbq, bn or hbn
     qp = _pad_rows(q_packed, _round_up(Q, bq))
     xp = _pad_rows(x_packed, _round_up(N, bn))
     out = hamming_distance_pallas(qp, xp, bq=bq, bn=bn, interpret=_interpret())
     return out[:Q, :N]
 
 
+def _topk_blocked(q_packed: jax.Array, x_packed: jax.Array, lanes: int,
+                  bq: int | None, bn: int | None, sub: int | None):
+    """Shared pad-to-blocks prologue for the two-pass kernels."""
+    Q, W = q_packed.shape
+    N = x_packed.shape[0]
+    hbq, hbn, hsub = tuning.topk_blocks(Q, N, W, lanes)
+    bq, bn, sub = bq or hbq, bn or hbn, sub or hsub
+    sub = min(sub, bn)
+    qp = _pad_rows(q_packed.astype(jnp.int32), _round_up(Q, bq))
+    xp = _pad_rows(x_packed.astype(jnp.int32), _round_up(N, bn))
+    return qp, xp, bq, bn, sub
+
+
 def hamming_hist(q_packed: jax.Array, x_packed: jax.Array, bins: int,
-                 bq: int = 64, bn: int = 1024, sub: int = 64) -> jax.Array:
+                 n_valid: jax.Array | int | None = None,
+                 bq: int | None = None, bn: int | None = None,
+                 sub: int | None = None) -> jax.Array:
     """Fused distance+histogram: (Q, W) x (N, W) -> (Q, bins) int32.
 
-    Padded dataset rows are all-ones codes; their spurious counts in the
-    clamp bin (bins-1) are subtracted before returning."""
+    Pass 1 of the two-pass counting select. Rows with global id >= n_valid
+    (default: all N rows valid) — including the block-alignment padding added
+    here — are masked exactly inside the kernel."""
     Q, N = q_packed.shape[0], x_packed.shape[0]
-    bq = min(bq, _round_up(Q, 8))
-    bn = min(bn, _round_up(N, sub))
-    sub = min(sub, bn)
-    qp = _pad_rows(q_packed, _round_up(Q, bq))
-    n_padded = _round_up(N, bn)
-    xp = _pad_rows(x_packed.astype(jnp.int32), n_padded, fill=-1)
-    hist = hamming_hist_pallas(qp, xp, bins, bq=bq, bn=bn, sub=sub,
+    qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_packed, bins, bq, bn, sub)
+    nv = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
+    hist = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn, sub=sub,
                                interpret=_interpret())
-    hist = hist[:Q]
-    if n_padded != N:
-        # exact correction: subtract the pad rows' contribution (tiny block)
-        hist = hist - ref.hamming_hist_ref(q_packed.astype(jnp.int32), xp[N:], bins)
-    return hist
+    return hist[:Q]
+
+
+def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
+                 n_valid: jax.Array | int | None = None,
+                 bq: int | None = None, bn: int | None = None,
+                 sub: int | None = None):
+    """Fused two-pass top-k: (Q, W) x (N, W) -> (dists (Q, k), ids (Q, k)).
+
+    The engine's high-throughput select: pass 1 histograms distances into
+    [0, bins) (clamped at bins-1; pass bins > max distance for exactness),
+    pass 2 re-streams the codes and emits the winners. Only (Q, bins) and
+    (Q, k) ever leave the kernels — the (Q, N) distance matrix is never
+    materialized. Semantics match ``topk.counting_topk`` on the clamped
+    distances: ascending, ties broken by index order, rows beyond
+    min(k, n_valid) padded with (bins, N). Rows with global id >= n_valid
+    are excluded (the engine's chunk padding path).
+    """
+    Q, N = q_packed.shape[0], x_packed.shape[0]
+    k_k = min(k, N)
+    if k_k == 0:
+        return (jnp.full((Q, k), bins, jnp.int32),
+                jnp.full((Q, k), N, jnp.int32))
+    qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_packed,
+                                        max(bins, k_k), bq, bn, sub)
+    nv = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
+    interp = _interpret()
+
+    # pass 1: the race -> per-query radius r* and the counts below it
+    hist = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn, sub=sub,
+                               interpret=interp)[:Q]
+    cum = jnp.cumsum(hist, axis=-1)
+    k_eff = jnp.minimum(k_k, nv)
+    r_star = jnp.argmax(cum >= k_eff, axis=-1).astype(jnp.int32)     # (Q,)
+    gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
+    n_lt = jnp.where(r_star > 0, gather(cum, jnp.maximum(r_star - 1, 0)), 0)
+    n_emit = jnp.minimum(gather(cum, r_star), k_eff)
+
+    # pass 2: the reports — padded query rows get r*=-1 so they emit nothing
+    q_pad = qp.shape[0] - Q
+    r_p = jnp.pad(r_star, (0, q_pad), constant_values=-1)
+    nlt_p = jnp.pad(n_lt, (0, q_pad))
+    out_d, out_i = hamming_emit_pallas(qp, xp, r_p, nlt_p, bins, k_k, nv,
+                                       bq=bq, bn=bn, sub=sub,
+                                       interpret=interp)
+    out_d, out_i = out_d[:Q], out_i[:Q]
+
+    # untouched slots -> (bins, N) sentinels, then one O(k log k) sort per row
+    live = jnp.arange(k_k, dtype=jnp.int32)[None, :] < n_emit[:, None]
+    out_d = jnp.where(live, out_d, bins)
+    out_i = jnp.where(live, out_i, N)
+    out_d, out_i = jax.lax.sort_key_val(out_d, out_i, dimension=-1)
+    if k_k < k:
+        out_d = jnp.pad(out_d, ((0, 0), (0, k - k_k)), constant_values=bins)
+        out_i = jnp.pad(out_i, ((0, 0), (0, k - k_k)), constant_values=N)
+    return out_d, out_i
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -84,4 +151,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.transpose(0, 2, 1, 3)[:, :S]
 
 
-__all__ = ["flash_attention", "hamming_distance", "hamming_hist", "ref"]
+__all__ = ["flash_attention", "hamming_distance", "hamming_hist",
+           "hamming_topk", "ref", "tuning"]

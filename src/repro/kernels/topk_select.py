@@ -1,15 +1,36 @@
-"""Pallas TPU kernel: fused Hamming-distance + bounded-domain histogram.
+"""Pallas TPU kernels: the fused two-pass counting select (temporal sort).
 
-Pass 1 of the two-pass counting select (the temporal sort's "race"): for
-each query, count how many dataset codes land at each distance in [0, bins).
-Fusing the XOR/popcount with the histogram means the (Q, N) distance matrix
-never exists in HBM — only the (Q, bins) counts leave the kernel, the same
-reduction the AP performs by keeping counters next to the Hamming macros.
+The paper's AP engine never materializes distances: inverted-Hamming
+counters race toward a threshold and nearer vectors *report earlier*, so the
+sort is a counting process over the bounded domain [0, d]. These two kernels
+are that pipeline on TPU — the (Q, N) distance matrix never exists in HBM:
 
-Grid is (Q/BQ, N/BN); the output tile is revisited across the N dimension
-(same index_map block for every j) and accumulated in VMEM — initialize at
-j == 0, add thereafter. The (BQ, sub, bins) one-hot intermediate is kept
-small by an inner fori over BN/sub sub-tiles.
+* **pass 1** (``hamming_hist_pallas``, the "race"): stream (BN, W) code
+  tiles HBM->VMEM, XOR+popcount against the query tile, and accumulate a
+  per-query distance histogram. Only (Q, bins) counts leave the kernel —
+  the same reduction the AP performs by keeping counters next to the
+  Hamming macros.
+* **pass 2** (``hamming_emit_pallas``, the "reports"): re-stream the SAME
+  tiles, recompute distances in VMEM (recompute is ~free; the scan is
+  bandwidth-bound), and scatter the winners straight into their output
+  slot: ids with dist < r* in index order first, then dist == r* ties in
+  index order, where r* is the per-query k-th-smallest radius derived from
+  the pass-1 histogram. Only (Q, k) ids/dists leave the kernel.
+
+HBM traffic drops from O(Q*N*4) bytes of distances to O(Q*(bins+k)) — the
+codes themselves are read twice, which for W words of codes vs N ints of
+distances is a win whenever 2*W < 4*Q words, i.e. always for batched queries.
+
+Both kernels take the valid-row count ``n_valid`` as a scalar (SMEM) so
+padded dataset rows — block-alignment padding here, chunk padding in the
+engine's scan — are masked exactly, by global row id, inside the kernel.
+
+Grid is (Q/BQ, N/BN) with the N dimension innermost; output tiles map to
+the same block for every j and are revisited: initialized at j == 0,
+accumulated thereafter. Running per-query emit counts for pass 2 are carried
+across j in a VMEM scratch. The (BQ, sub, lanes) one-hot intermediates are
+kept small by an inner fori over BN/sub sub-tiles (block shapes from
+kernels/tuning.py).
 """
 from __future__ import annotations
 
@@ -18,39 +39,57 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _hist_kernel(q_ref, x_ref, hist_ref, *, bins: int, sub: int):
+def _tile_dist(q, xs, bins: int):
+    """(BQ, W) x (sub, W) int32 packed -> (BQ, sub) clamped distances."""
+    xor = jax.lax.bitwise_xor(q[:, None, :], xs[None, :, :])
+    dist = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
+    return jnp.minimum(dist, bins - 1)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: fused distance + histogram (the "race")
+# ---------------------------------------------------------------------------
+
+def _hist_kernel(nv_ref, q_ref, x_ref, hist_ref, *, bins: int, sub: int,
+                 bn: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
+    n_valid = nv_ref[0]
     q = q_ref[...]                                  # (BQ, W)
     x = x_ref[...]                                  # (BN, W)
-    bn = x.shape[0]
     bq = q.shape[0]
     bin_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bins), 2)
+    base = j * bn
 
     def body(s, acc):
         xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
-        xor = jax.lax.bitwise_xor(q[:, None, :], xs[None, :, :])
-        dist = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
-        dist = jnp.minimum(dist, bins - 1)
-        onehot = (dist[:, :, None] == bin_iota).astype(jnp.int32)  # (BQ,sub,bins)
-        return acc + jnp.sum(onehot, axis=1)
+        dist = _tile_dist(q, xs, bins)
+        gid = base + s * sub + jax.lax.broadcasted_iota(jnp.int32, (1, sub), 1)
+        valid = gid < n_valid                                      # (1, sub)
+        onehot = (dist[:, :, None] == bin_iota) & valid[:, :, None]
+        return acc + jnp.sum(onehot.astype(jnp.int32), axis=1)
 
     acc = jax.lax.fori_loop(0, bn // sub, body,
                             jnp.zeros((bq, bins), jnp.int32))
     hist_ref[...] += acc
 
 
-@functools.partial(jax.jit, static_argnames=("bins", "bq", "bn", "sub", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bins", "bq", "bn", "sub",
+                                             "interpret"))
 def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
+                        n_valid: jax.Array | None = None,
                         bq: int = 64, bn: int = 1024, sub: int = 64,
                         interpret: bool = False) -> jax.Array:
-    """q: (Q, W), x: (N, W) -> (Q, bins) int32 distance histogram."""
+    """q: (Q, W), x: (N, W) -> (Q, bins) int32 distance histogram.
+
+    Rows with global id >= n_valid (default N) are excluded exactly."""
     Q, W = q_packed.shape
     N, _ = x_packed.shape
     bq, bn = min(bq, Q), min(bn, N)
@@ -58,16 +97,127 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
     assert Q % bq == 0 and N % bn == 0 and bn % sub == 0, (Q, N, bq, bn, sub)
     q32 = q_packed.astype(jnp.int32) if q_packed.dtype != jnp.int32 else q_packed
     x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
+    nv = jnp.full((1,), N, jnp.int32) if n_valid is None else (
+        jnp.asarray(n_valid, jnp.int32).reshape(1))
 
     grid = (Q // bq, N // bn)
     return pl.pallas_call(
-        functools.partial(_hist_kernel, bins=bins, sub=sub),
+        functools.partial(_hist_kernel, bins=bins, sub=sub, bn=bn),
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bq, bins), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Q, bins), jnp.int32),
         interpret=interpret,
-    )(q32, x32)
+    )(nv, q32, x32)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: re-stream + emit winners (the "reports")
+# ---------------------------------------------------------------------------
+
+def _emit_kernel(nv_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref, outi_ref,
+                 cnt_ref, *, bins: int, k: int, sub: int, bn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        outd_ref[...] = jnp.zeros_like(outd_ref)
+        outi_ref[...] = jnp.zeros_like(outi_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    n_valid = nv_ref[0]
+    q = q_ref[...]                                  # (BQ, W)
+    x = x_ref[...]                                  # (BN, W)
+    r_star = r_ref[...]                             # (BQ, 1)
+    n_lt_total = nlt_ref[...]                       # (BQ, 1)
+    bq = q.shape[0]
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+    base = j * bn
+
+    def body(s, carry):
+        cnt_lt, cnt_tie, od, oi = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
+        dist = _tile_dist(q, xs, bins)                             # (BQ, sub)
+        gid = base + s * sub + jax.lax.broadcasted_iota(jnp.int32, (1, sub), 1)
+        valid = gid < n_valid                                      # (1, sub)
+        is_lt = valid & (dist < r_star)
+        is_tie = valid & (dist == r_star)
+        # slot of each winner: ids with dist < r* pack first (their global
+        # count is < k by construction of r*), r*-ties fill the remainder in
+        # index order; overflow ties land at slot k and match no output lane
+        rank_lt = cnt_lt + jnp.cumsum(is_lt.astype(jnp.int32), axis=1) - 1
+        rank_tie = (n_lt_total + cnt_tie
+                    + jnp.cumsum(is_tie.astype(jnp.int32), axis=1) - 1)
+        slot = jnp.where(is_lt, rank_lt, jnp.where(is_tie, rank_tie, k))
+        slot = jnp.minimum(slot, k)
+        onehot = (slot[:, :, None] == slot_iota).astype(jnp.int32)
+        od = od + jnp.sum(onehot * dist[:, :, None], axis=1)
+        oi = oi + jnp.sum(onehot * gid[:, :, None], axis=1)
+        cnt_lt = cnt_lt + jnp.sum(is_lt.astype(jnp.int32), axis=1,
+                                  keepdims=True)
+        cnt_tie = cnt_tie + jnp.sum(is_tie.astype(jnp.int32), axis=1,
+                                    keepdims=True)
+        return cnt_lt, cnt_tie, od, oi
+
+    init = (cnt_ref[:, 0:1], cnt_ref[:, 1:2],
+            jnp.zeros((bq, k), jnp.int32), jnp.zeros((bq, k), jnp.int32))
+    cnt_lt, cnt_tie, od, oi = jax.lax.fori_loop(0, bn // sub, body, init)
+    outd_ref[...] += od
+    outi_ref[...] += oi
+    cnt_ref[:, 0:1] = cnt_lt
+    cnt_ref[:, 1:2] = cnt_tie
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "k", "bq", "bn", "sub",
+                                             "interpret"))
+def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
+                        r_star: jax.Array, n_lt: jax.Array, bins: int, k: int,
+                        n_valid: jax.Array | None = None,
+                        bq: int = 64, bn: int = 1024, sub: int = 64,
+                        interpret: bool = False):
+    """Emit the top-k winners given the pass-1 radius.
+
+    q: (Q, W), x: (N, W); r_star/n_lt: (Q,) int32 — per-query k-th-smallest
+    radius and count of rows with dist < r* (both from the pass-1 histogram).
+    Returns (dists (Q, k), ids (Q, k)) int32, slot-ordered (NOT distance
+    sorted): slots [0, n_lt) hold dist < r* rows in index order, subsequent
+    slots hold r*-ties in index order; untouched slots are 0 — the caller
+    masks slots >= n_emitted and sorts (kernels/ops.py::hamming_topk)."""
+    Q, W = q_packed.shape
+    N, _ = x_packed.shape
+    bq, bn = min(bq, Q), min(bn, N)
+    sub = min(sub, bn)
+    assert Q % bq == 0 and N % bn == 0 and bn % sub == 0, (Q, N, bq, bn, sub)
+    q32 = q_packed.astype(jnp.int32) if q_packed.dtype != jnp.int32 else q_packed
+    x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
+    nv = jnp.full((1,), N, jnp.int32) if n_valid is None else (
+        jnp.asarray(n_valid, jnp.int32).reshape(1))
+    r2 = r_star.astype(jnp.int32).reshape(Q, 1)
+    nlt2 = n_lt.astype(jnp.int32).reshape(Q, 1)
+
+    grid = (Q // bq, N // bn)
+    return pl.pallas_call(
+        functools.partial(_emit_kernel, bins=bins, k=k, sub=sub, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, 2), jnp.int32)],
+        interpret=interpret,
+    )(nv, q32, x32, r2, nlt2)

@@ -1,0 +1,67 @@
+"""Block-shape heuristics shared by the Hamming kernels (see DESIGN.md).
+
+One table instead of per-call-site hardcoded defaults: both passes of the
+fused top-k (``hamming_hist_pallas`` / ``hamming_emit_pallas``) and the
+materializing distance kernel ask here for (bq, bn, sub) given the problem
+shape and backend.
+
+The governing budget on TPU is VMEM: each grid cell holds the code tiles
+(bq + bn) * W words plus the kernels' widest intermediate — the
+(bq, sub, lanes) one-hot used for the histogram scatter / slot scatter,
+where ``lanes`` is `bins` for pass 1 and `k` for pass 2. We size ``sub`` so
+that intermediate stays under ~2 MiB, keep bq a sublane multiple (8) and bn
+a lane multiple (128), and stream the dataset in the largest bn that still
+double-buffers. On CPU the kernels run interpreted (the grid lowers to an
+XLA loop), so smaller tiles bound trace size instead of VMEM.
+"""
+from __future__ import annotations
+
+import jax
+
+_SUBLANE = 8
+_LANE = 128
+# per-cell budget for the (bq, sub, lanes) int32 one-hot intermediate
+_ONEHOT_BYTES = {"tpu": 2 << 20, "cpu": 1 << 20, "gpu": 1 << 20}
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _round_down(n: int, m: int) -> int:
+    return max(m, n // m * m)
+
+
+def topk_blocks(Q: int, N: int, W: int, lanes: int,
+                backend: str | None = None) -> tuple[int, int, int]:
+    """(bq, bn, sub) for the two-pass counting-select kernels.
+
+    ``lanes`` is the width of the per-element one-hot scatter: ``bins`` for
+    the histogram pass, ``k`` for the emit pass. Both passes should be given
+    the SAME (bq, bn, sub) (use lanes=max(bins, k)) so they stream the
+    dataset in identical tiles.
+    """
+    backend = backend or jax.default_backend()
+    budget = _ONEHOT_BYTES.get(backend, 1 << 20)
+
+    bq = min(_round_up(Q, _SUBLANE), 64 if backend == "tpu" else 32)
+    # one-hot (bq, sub, lanes) int32 under budget; sub a sublane multiple
+    sub = _round_down(budget // (4 * bq * max(lanes, 1)), _SUBLANE)
+    sub = min(sub, 256)
+    # stream the dataset in big tiles: amortize the revisited output block
+    bn_cap = 2048 if backend == "tpu" else 512
+    bn = min(_round_up(N, sub), _round_down(bn_cap, sub))
+    return bq, bn, sub
+
+
+def distance_blocks(Q: int, N: int, W: int,
+                    backend: str | None = None) -> tuple[int, int]:
+    """(bq, bn) for the materializing (Q, N) distance kernel: the (bq, bn)
+    int32 output tile plus the (bq, bn, W) xor intermediate dominate."""
+    # same tile on every backend for now: on TPU it fits the (bq, bn, W) xor
+    # intermediate comfortably in VMEM; interpreted, it only bounds trace
+    # length. Split per backend here when the TPU numbers diverge.
+    bq, bn = 128, 512
+    bq = min(bq, _round_up(Q, _SUBLANE))
+    bn = min(bn, _round_up(N, _LANE))
+    return bq, bn

@@ -1,0 +1,73 @@
+"""Property-test compat layer: uses ``hypothesis`` when installed, otherwise
+falls back to a tiny deterministic sampler with the same decorator shape.
+
+The fallback covers exactly the API surface the suite uses — ``given``,
+``settings.register_profile/load_profile`` and the ``st.integers`` /
+``st.sampled_from`` strategies — drawing ``max_examples`` pseudo-random
+examples per test from a fixed seed, always including the strategy's
+boundary values, so a clean environment (no hypothesis) still exercises
+the properties instead of erroring at collection.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on clean environments
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw, boundary=()):
+            self.draw = draw
+            self.boundary = tuple(boundary)
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             boundary=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements),
+                             boundary=(elements[0], elements[-1]))
+
+    class settings:  # noqa: N801 - mimics hypothesis.settings
+        _profiles: dict = {}
+        _active: dict = {"max_examples": 25}
+
+        def __init__(self, **kwargs):
+            pass
+
+        @classmethod
+        def register_profile(cls, name, **kwargs):
+            cls._profiles[name] = kwargs
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = {"max_examples": 25, **cls._profiles.get(name, {})}
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = int(settings._active.get("max_examples") or 25)
+                # crc32, not hash(): hash of str is randomized per process,
+                # which would make failing examples unreproducible
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                # boundary case first: every strategy at its min, then max
+                for pick in ("lo", "hi"):
+                    args = [s.boundary[0 if pick == "lo" else -1]
+                            for s in strategies]
+                    fn(*args)
+                for _ in range(max(0, n - 2)):
+                    fn(*[s.draw(rng) for s in strategies])
+            # pytest must see the zero-arg signature, not fn's via __wrapped__
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,5 +1,5 @@
 """Statistical activation reduction accuracy model (paper Fig. 11)."""
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import hierarchy
 

@@ -1,0 +1,151 @@
+"""Fused two-pass Pallas top-k (hamming_topk + engine select="fused"):
+equivalence with the oracle and the materialized-distance paths, including
+the padding/masking edges the kernels handle internally."""
+import numpy as np
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import binary, engine, topk
+from repro.kernels import ops, ref, tuning
+
+# shapes chosen to hit: N/Q multiples of the default blocks, N NOT a
+# multiple of any block (pad masking), W from 1 to 8 words, Q below one
+# sublane tile
+SHAPES = [(8, 1024, 64), (5, 999, 96), (16, 300, 32), (1, 4097, 256),
+          (33, 130, 160)]
+
+
+def _data(seed, n, q, d):
+    rng = np.random.default_rng(seed)
+    xb = jnp.asarray(rng.integers(0, 2, (n, d)), jnp.uint8)
+    qb = jnp.asarray(rng.integers(0, 2, (q, d)), jnp.uint8)
+    return xb, qb
+
+
+@pytest.mark.parametrize("q,n,d", SHAPES)
+@pytest.mark.parametrize("k", [1, 10, 64])
+def test_hamming_topk_matches_oracle(q, n, d, k):
+    xb, qb = _data(0, n, q, d)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    dist = binary.hamming_ref(qb, xb)
+    rd, _ = topk.topk_ref(dist, min(k, n))
+    cd, ci = topk.counting_topk(dist, k, d)
+    fd, fi = ops.hamming_topk(qp, xp, k, d + 1)
+    assert (fd[:, :min(k, n)] == rd).all()          # distances == sorted oracle
+    assert (fd == cd).all() and (fi == ci).all()    # bit-identical tie semantics
+
+
+def test_heavy_ties_at_r_star():
+    """d=8 over 4096 rows: hundreds of ties at every radius; the emit pass
+    must fill the tie slots in index order exactly like counting_topk."""
+    xb, qb = _data(1, 4096, 4, 8)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    dist = binary.hamming_ref(qb, xb)
+    for k in (3, 50, 512):
+        cd, ci = topk.counting_topk(dist, k, 8)
+        fd, fi = ops.hamming_topk(qp, xp, k, 9)
+        assert (fd == cd).all() and (fi == ci).all()
+
+
+def test_k_exceeds_rows():
+    """k > N: real rows first, then (bins, N) padding, same as counting."""
+    xb, qb = _data(2, 37, 3, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    dist = binary.hamming_ref(qb, xb)
+    cd, ci = topk.counting_topk(dist, 50, 64)
+    fd, fi = ops.hamming_topk(qp, xp, 50, 65)
+    assert (fd == cd).all() and (fi == ci).all()
+    assert (fd[:, 37:] == 65).all() and (fi[:, 37:] == 37).all()
+
+
+def test_n_valid_masks_tail_rows():
+    """Rows >= n_valid must be invisible to both passes (the engine's
+    chunk-padding contract)."""
+    xb, qb = _data(3, 512, 4, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    nv = 300
+    dist = binary.hamming_ref(qb, xb[:nv])
+    cd, ci = topk.counting_topk(dist, 16, 64)
+    fd, fi = ops.hamming_topk(qp, xp, 16, 65, n_valid=nv)
+    assert (fd == cd).all() and (fi == ci).all()
+
+
+@pytest.mark.parametrize("q,n,d", SHAPES)
+def test_hamming_hist_pad_path(q, n, d):
+    """Direct test of ops.hamming_hist pad handling: block-alignment rows
+    added by the wrapper must contribute nothing, even when their (zero)
+    codes would land in bin 0 and silently corrupt r*. The ragged SHAPES
+    force padding; the aligned ones cover the no-pad path."""
+    xb, qb = _data(4, n, q, d)
+    xp = binary.pack_bits(xb).astype(jnp.int32)
+    qp = binary.pack_bits(qb).astype(jnp.int32)
+    hist = ops.hamming_hist(qp, xp, d + 1)
+    expect = ref.hamming_hist_ref(qp, xp, d + 1)
+    assert (hist == expect).all()
+    assert int(hist.sum()) == q * n
+
+
+def test_hamming_hist_clamp_bin():
+    """Distances >= bins must clamp into the top bin, matching the ref."""
+    qp = jnp.zeros((2, 2), jnp.int32)
+    xp = jnp.full((70, 2), -1, jnp.int32)          # distance 64 everywhere
+    hist = ops.hamming_hist(qp, xp, 5)
+    assert (hist[:, 4] == 70).all() and int(hist.sum()) == 2 * 70
+
+
+@pytest.mark.parametrize("n,q,d,k,chunk", [
+    (500, 6, 64, 10, 130),      # ragged chunks: last chunk mostly padding
+    (2048, 16, 128, 16, 512),   # aligned chunks
+    (300, 4, 32, 400, 128),     # k > N through the scan merge
+    (17, 2, 32, 5, 16),         # tiny: N barely above one chunk
+])
+def test_engine_fused_bit_identical(n, q, d, k, chunk):
+    xb, qb = _data(5, n, q, d)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    ad, ai = engine.search_chunked(xp, qp, k, d, chunk=chunk, select="auto")
+    fd, fi = engine.search_chunked(xp, qp, k, d, chunk=chunk, select="fused")
+    assert (ad == fd).all() and (ai == fi).all()
+
+
+def test_engine_class_select_knob():
+    xb, qb = _data(6, 400, 3, 64)
+    eng = engine.KNNEngine(codes=binary.pack_bits(xb), d=64)
+    ad, ai = eng.search(binary.pack_bits(qb), k=7)
+    fd, fi = eng.search(binary.pack_bits(qb), k=7, select="fused")
+    assert (ad == fd).all() and (ai == fi).all()
+
+
+def test_sharded_fused_bit_identical(multidevice):
+    """search_sharded(select='fused') under shard_map on 4 fake devices —
+    the traced n_valid scalar and the SMEM BlockSpec must survive SPMD."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import binary, engine
+
+rng = np.random.default_rng(0)
+xb = jnp.asarray(rng.integers(0, 2, (1024, 64)), jnp.uint8)
+qb = jnp.asarray(rng.integers(0, 2, (8, 64)), jnp.uint8)
+xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+with mesh:
+    ad, ai = engine.search_sharded(xp, qp, 10, 64, mesh, ("data",), chunk=256)
+    fd, fi = engine.search_sharded(xp, qp, 10, 64, mesh, ("data",), chunk=256,
+                                   select="fused")
+assert (ad == fd).all() and (ai == fi).all()
+print("OK")
+""", n_devices=4)
+
+
+def test_topk_blocks_divisibility():
+    """The heuristic must return kernel-legal shapes: bq | Q_pad, sub | bn,
+    sublane/lane alignment."""
+    for (Q, N, W, lanes) in [(1, 100, 1, 9), (256, 1 << 17, 8, 257),
+                             (64, 4096, 4, 129), (7, 50, 2, 33)]:
+        bq, bn, sub = tuning.topk_blocks(Q, N, W, lanes, backend="cpu")
+        assert bq % 8 == 0 and bn % sub == 0 and sub % 8 == 0
+        bq_t, bn_t, sub_t = tuning.topk_blocks(Q, N, W, lanes, backend="tpu")
+        assert bn_t % sub_t == 0
+        # one-hot intermediate respects the VMEM budget
+        assert 4 * bq_t * sub_t * lanes <= (2 << 20)
