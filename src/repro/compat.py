@@ -24,5 +24,6 @@ def make_mesh(shape, axis_names):
         return jax.make_mesh(
             shape, axis_names,
             axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
-    except TypeError:  # pragma: no cover - older jax
+    except (TypeError, AttributeError):  # pragma: no cover - older jax
+        # older jax: make_mesh lacks axis_types / jax.sharding.AxisType absent
         return jax.make_mesh(shape, axis_names)

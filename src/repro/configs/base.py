@@ -71,9 +71,14 @@ class RetrievalConfig:
     k: int = 16                    # neighbors
     local_k: int = 4               # k' for hierarchical (statistical) reduction
     interpolation: float = 0.25    # lambda for kNN-LM mixing
-    chunk_size: int = 1 << 16      # per-device scan chunk ("board capacity")
-    # top-k select path: "auto" | "counting" | "bisect" | "fused"
-    # (see DESIGN.md decision table); orthogonal to the distance method
+    # per-device scan chunk ("board capacity") for the MATERIALIZING selects
+    # and "fused_scan" only — the single-shot "fused" path streams the whole
+    # datastore in one invocation and tiles via kernels/tuning.py, so this
+    # is a no-op for it
+    chunk_size: int = 1 << 16
+    # top-k select path: "auto" | "counting" | "bisect" | "fused" |
+    # "fused_scan" (see DESIGN.md decision table); orthogonal to the
+    # distance method
     select: str = "auto"
 
 

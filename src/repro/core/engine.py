@@ -3,9 +3,16 @@ and mesh-distributed.
 
 Structure mirrors the paper's system:
 
-* one *chunk* of codes resident per step == one AP board configuration;
-  the ``lax.scan`` over chunks with an O(k) running merge is "partial
-  reconfiguration" at zero swap cost (§3.3);
+* the materializing selects scan one *chunk* of codes per step == one AP
+  board configuration; the ``lax.scan`` over chunks with an O(k) running
+  merge is "partial reconfiguration" at zero swap cost (§3.3);
+* ``select="fused"`` configures the WHOLE datastore at once, as the AP
+  does before a race (§3.3): one two-pass Pallas invocation owns all of N
+  — no scan, no merge, no per-chunk host roundtrips — with block-min
+  pruning skipping pass-2 tiles that provably hold no winner
+  (kernels/topk_select.py). ``chunk`` is a no-op for it (kernel tiling
+  comes from kernels/tuning.py); ``select="fused_scan"`` keeps the chunked
+  variant for datastores too large to address in one invocation;
 * the mesh-sharded datastore == macro-level parallelism across boards;
 * the distributed merge reports only each shard's local top-k'
   (``k_local``) == statistical activation reduction (§6.3); with
@@ -46,36 +53,64 @@ def _distances(q_packed: jax.Array, chunk_codes: jax.Array, d: int,
     raise ValueError(method)
 
 
+def _auto_chunk(chunk: int, d: int) -> int:
+    """Composite-key representability guard — the *auto* select only.
+
+    ``topk.composite_topk`` ranks by the f32 key ``dist * chunk + idx``,
+    which is exact only while (d + 1) * chunk < 2^24 (f32 mantissa).
+    Shrinking the chunk keeps auto on XLA's fast ``top_k`` path instead of
+    its bisect fallback — a performance choice, not a correctness one. The
+    other selects never build the key and are bit-identical at ANY chunk
+    size, so they scan at the caller's chunk unmodified."""
+    if (d + 1) * chunk < (1 << 24):
+        return chunk
+    return max(1024, ((1 << 24) // (d + 1)) // 1024 * 1024)
+
+
 def search_chunked(codes_packed: jax.Array, q_packed: jax.Array, k: int,
                    d: int, chunk: int = 1 << 16,
                    method: str = DistanceMethod.XOR,
                    id_offset: jax.Array | int = 0,
                    select: str = "auto") -> Tuple[jax.Array, jax.Array]:
-    """Scan the dataset in chunks. codes: (N, W) uint32, q: (Q, W).
+    """Search the datastore. codes: (N, W) uint32, q: (Q, W).
 
     ``select``: 'auto' (composite-key fast path), 'counting' (histogram
-    counting select), 'bisect' (scatter-free counting select), or 'fused'
-    (two-pass Pallas counting select — the chunk's (Q, chunk) distance
-    matrix is never materialized; orthogonal to ``method``, which it
-    ignores). All four produce bit-identical results.
+    counting select), 'bisect' (scatter-free counting select), 'fused'
+    (single-shot two-pass Pallas counting select: ONE hist + ONE emit
+    ``pallas_call`` own the entire datastore — no ``lax.scan``, no
+    ``merge_topk``, no (Q, N) distance matrix — with block-min pruning in
+    pass 2; orthogonal to ``method``, which it ignores), or 'fused_scan'
+    (the chunk-scanned variant of 'fused', for datastores that exceed what
+    one invocation should address, e.g. codes paged in from host memory).
+    All five produce bit-identical results at any chunk size; ``chunk``
+    only sets the scan granularity of the materializing/'fused_scan' paths
+    ('fused' streams the whole datastore and tiles via kernels/tuning.py).
+    'auto' additionally shrinks its own chunk to keep its composite key
+    f32-representable (see ``_auto_chunk``).
     Returns (dists (Q,k) ascending, global ids (Q,k))."""
     N, W = codes_packed.shape
     Q = q_packed.shape[0]
+
+    if select == "fused":
+        from repro.kernels import ops
+
+        bd, bi = ops.hamming_topk(q_packed, codes_packed, k, d + 1)
+        return bd, bi + id_offset
+
     chunk = min(chunk, N)
-    if select == "auto" and (d + 1) * chunk >= (1 << 24):
-        # keep the composite key exactly representable in f32
-        chunk = max(1024, ((1 << 24) // (d + 1)) // 1024 * 1024)
+    if select == "auto":
+        chunk = _auto_chunk(chunk, d)
     n_chunks = (N + chunk - 1) // chunk
     if N % chunk:
         pad = n_chunks * chunk - N
         # pad with all-ones codes at max distance; ids beyond N are masked by
-        # their distance landing at the back of the merge (the fused kernel
-        # masks them exactly via n_valid instead)
+        # their distance landing at the back of the merge (the fused kernels
+        # mask them exactly via n_valid instead)
         codes_packed = jnp.pad(codes_packed, ((0, pad), (0, 0)),
                                constant_values=jnp.uint32(0xFFFFFFFF))
     chunks = codes_packed.reshape(n_chunks, chunk, W)
 
-    if select == "fused":
+    if select == "fused_scan":
         from repro.kernels import ops
 
         def body(carry, xs):
@@ -136,7 +171,9 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
                    select: str = "auto"):
     """Datastore sharded over ``axes`` (cardinality sharding); queries
     replicated. Each shard reports its local top-k' and the merge runs over
-    the gathered (devices * k') candidates.
+    the gathered (devices * k') candidates. With ``select="fused"`` every
+    shard runs the single-shot two-pass select over its whole local slice
+    (one hist + one emit invocation per shard, block-min pruning included).
 
     k_local < k trades exactness for an m/k' collective-bandwidth reduction
     with the accuracy model of core/hierarchy.py; k_local=None means k (exact).

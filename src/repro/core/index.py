@@ -3,10 +3,13 @@ LSH tables, and randomized kd-trees.
 
 As in the paper, index *traversal* is factored out of the scan engine: it
 selects candidate buckets, and the engine brute-force scans them. Bucket
-capacity plays the role of "one AP board configuration" — chosen near the
-engine's natural chunk capacity. kd-tree construction/traversal run on the
-host (numpy), exactly the paper's host/accelerator split; k-means and LSH
-traversals are cheap dense ops and run on device.
+capacity plays the role of "one AP board configuration" — a sizing
+heuristic only: since the fused select went single-shot, the engine's
+chunk is a tuning knob of the materializing scans, not a capacity limit,
+and a bucket scan is one kernel invocation regardless. kd-tree
+construction/traversal run on the host (numpy), exactly the paper's
+host/accelerator split; k-means and LSH traversals are cheap dense ops and
+run on device.
 """
 from __future__ import annotations
 

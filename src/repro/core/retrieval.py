@@ -58,8 +58,9 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
     """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab).
 
     ``select`` overrides rcfg.select (the top-k path; "fused" streams the
-    datastore through the two-pass Pallas kernels without ever
-    materializing distances)."""
+    whole datastore through one two-pass Pallas invocation without ever
+    materializing distances — ``rcfg.chunk_size`` only granulates the
+    materializing/'fused_scan' scans)."""
     select = rcfg.select if select is None else select
     q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
     if mesh is not None and axes:
@@ -71,9 +72,17 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
         dists, ids = engine.search_chunked(
             store.codes, q_codes, rcfg.k, rcfg.code_bits,
             chunk=rcfg.chunk_size, method=method, select=select)
-    ids = jnp.minimum(ids, store.values.shape[0] - 1)
-    neighbor_tokens = store.values[ids]                          # (Q, k)
-    w = jax.nn.softmax(-dists.astype(jnp.float32) / temperature, axis=-1)
+    n = store.values.shape[0]
+    # fewer than k valid neighbors -> the engine pads with sentinels
+    # (dist = d+1, id >= N): they must not receive softmax weight or vote
+    # for values[N-1]; mask them out of the neighbor distribution (an
+    # all-invalid row degenerates to p = 0 and hits the log floor below)
+    valid = (ids < n) & (dists <= rcfg.code_bits)                # (Q, k)
+    neighbor_tokens = store.values[jnp.minimum(ids, n - 1)]      # (Q, k)
+    w = jax.nn.softmax(
+        jnp.where(valid, -dists.astype(jnp.float32) / temperature, -jnp.inf),
+        axis=-1)
+    w = jnp.where(valid, w, 0.0)
     p = jnp.zeros((hidden.shape[0], vocab), jnp.float32)
     p = p.at[jnp.arange(hidden.shape[0])[:, None], neighbor_tokens].add(w)
     return jnp.log(jnp.maximum(p, 1e-9))

@@ -6,6 +6,10 @@ same calls compile to Mosaic. Shapes are padded to block multiples here so
 the kernels stay assert-simple; padded dataset rows are masked exactly
 inside the kernels by the ``n_valid`` scalar. Block shapes come from the
 shared heuristic in kernels/tuning.py unless explicitly overridden.
+
+``hamming_topk`` is the engine's single-shot fused select: one hist + one
+emit ``pallas_call`` over the WHOLE datastore for any N, with the pass-1
+block-min summary pruning pass-2 tiles that cannot hold a winner.
 """
 from __future__ import annotations
 
@@ -69,43 +73,63 @@ def hamming_hist(q_packed: jax.Array, x_packed: jax.Array, bins: int,
 
     Pass 1 of the two-pass counting select. Rows with global id >= n_valid
     (default: all N rows valid) — including the block-alignment padding added
-    here — are masked exactly inside the kernel."""
+    here — are masked exactly inside the kernel. (The kernel's second
+    output, the block-min pruning summary, is an implementation detail of
+    ``hamming_topk`` and is dropped here.)"""
     Q, N = q_packed.shape[0], x_packed.shape[0]
     qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_packed, bins, bq, bn, sub)
     nv = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
-    hist = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn, sub=sub,
-                               interpret=_interpret())
+    hist, _ = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn, sub=sub,
+                                  interpret=_interpret())
     return hist[:Q]
 
 
 def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
                  n_valid: jax.Array | int | None = None,
                  bq: int | None = None, bn: int | None = None,
-                 sub: int | None = None):
-    """Fused two-pass top-k: (Q, W) x (N, W) -> (dists (Q, k), ids (Q, k)).
+                 sub: int | None = None, return_stats: bool = False):
+    """Single-shot fused two-pass top-k over the WHOLE datastore:
+    (Q, W) x (N, W) -> (dists (Q, k), ids (Q, k)).
 
-    The engine's high-throughput select: pass 1 histograms distances into
-    [0, bins) (clamped at bins-1; pass bins > max distance for exactness),
-    pass 2 re-streams the codes and emits the winners. Only (Q, bins) and
-    (Q, k) ever leave the kernels — the (Q, N) distance matrix is never
-    materialized. Semantics match ``topk.counting_topk`` on the clamped
-    distances: ascending, ties broken by index order, rows beyond
-    min(k, n_valid) padded with (bins, N). Rows with global id >= n_valid
-    are excluded (the engine's chunk padding path).
+    The engine's high-throughput select, one hist + one emit ``pallas_call``
+    for any N (the Pallas grid streams the N dimension; arbitrary N is
+    padded to a block multiple here and masked exactly in-kernel): pass 1
+    histograms distances into [0, bins) (clamped at bins-1; pass bins > max
+    distance for exactness) and emits the (Q/bq, N/bn) block-min pruning
+    summary, pass 2 re-streams the codes and emits the winners, skipping
+    every (query-block, data-block) tile whose summary proves it holds no
+    winner. Only (Q, bins), the tiny summary, and (Q, k) ever leave the
+    kernels — the (Q, N) distance matrix is never materialized. Semantics
+    match ``topk.counting_topk`` on the clamped distances: ascending, ties
+    broken by index order, rows beyond min(k, n_valid) padded with
+    (bins, N). Rows with global id >= n_valid are excluded exactly.
+
+    ``return_stats=True`` additionally returns a dict with the pruning
+    telemetry: ``blocks_total`` (python int, grid tiles in pass 2),
+    ``blocks_skipped`` (traced int32 scalar, tiles the skip guard pruned —
+    padding-only tiles included, they always prune), and ``block_min`` (the
+    summary itself).
     """
     Q, N = q_packed.shape[0], x_packed.shape[0]
     k_k = min(k, N)
     if k_k == 0:
-        return (jnp.full((Q, k), bins, jnp.int32),
-                jnp.full((Q, k), N, jnp.int32))
+        out = (jnp.full((Q, k), bins, jnp.int32),
+               jnp.full((Q, k), N, jnp.int32))
+        if return_stats:
+            return out + ({"blocks_total": 0,
+                           "blocks_skipped": jnp.int32(0),
+                           "block_min": jnp.zeros((0, 0), jnp.int32)},)
+        return out
     qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_packed,
                                         max(bins, k_k), bq, bn, sub)
     nv = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
     interp = _interpret()
 
-    # pass 1: the race -> per-query radius r* and the counts below it
-    hist = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn, sub=sub,
-                               interpret=interp)[:Q]
+    # pass 1: the race -> per-query radius r*, the counts below it, and the
+    # block-min summary pass 2 prunes with
+    hist, block_min = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn,
+                                          sub=sub, interpret=interp)
+    hist = hist[:Q]
     cum = jnp.cumsum(hist, axis=-1)
     k_eff = jnp.minimum(k_k, nv)
     r_star = jnp.argmax(cum >= k_eff, axis=-1).astype(jnp.int32)     # (Q,)
@@ -118,6 +142,7 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
     r_p = jnp.pad(r_star, (0, q_pad), constant_values=-1)
     nlt_p = jnp.pad(n_lt, (0, q_pad))
     out_d, out_i = hamming_emit_pallas(qp, xp, r_p, nlt_p, bins, k_k, nv,
+                                       block_min=block_min,
                                        bq=bq, bn=bn, sub=sub,
                                        interpret=interp)
     out_d, out_i = out_d[:Q], out_i[:Q]
@@ -130,6 +155,14 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
     if k_k < k:
         out_d = jnp.pad(out_d, ((0, 0), (0, k - k_k)), constant_values=bins)
         out_i = jnp.pad(out_i, ((0, 0), (0, k - k_k)), constant_values=N)
+    if return_stats:
+        # mirror the kernel's guard: a tile is skipped iff its min valid
+        # distance exceeds every r* in its query block
+        max_r_b = jnp.max(r_p.reshape(-1, bq), axis=1)        # (Q_pad/bq,)
+        skipped = block_min > max_r_b[:, None]
+        return out_d, out_i, {"blocks_total": int(block_min.size),
+                              "blocks_skipped": jnp.sum(skipped),
+                              "block_min": block_min}
     return out_d, out_i
 
 

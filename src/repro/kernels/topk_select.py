@@ -31,6 +31,19 @@ accumulated thereafter. Running per-query emit counts for pass 2 are carried
 across j in a VMEM scratch. The (BQ, sub, lanes) one-hot intermediates are
 kept small by an inner fori over BN/sub sub-tiles (block shapes from
 kernels/tuning.py).
+
+The grid owns the WHOLE datastore in one invocation (kernels/ops.py pads N
+to a block multiple; the engine no longer chunk-scans this path), which
+enables **block-min pruning**: pass 1 additionally emits a tiny
+(Q/BQ, N/BN) int32 summary — the minimum valid distance in each
+(query-block, data-block) tile. Pass 2 compares each tile's summary entry
+against the widest winning radius max(r*) of its query block and wraps the
+entire recompute+emit body in ``pl.when(block_min <= max(r*))``: a tile
+that provably holds no winner costs one SMEM scalar compare instead of a
+re-streamed XOR/popcount/scatter. On clustered or sorted datastores most
+pass-2 tiles skip. Skipping is exact — the emit counters only ever advance
+on winners, so an all-loser tile leaves every carried count and output slot
+untouched.
 """
 from __future__ import annotations
 
@@ -53,8 +66,8 @@ def _tile_dist(q, xs, bins: int):
 # pass 1: fused distance + histogram (the "race")
 # ---------------------------------------------------------------------------
 
-def _hist_kernel(nv_ref, q_ref, x_ref, hist_ref, *, bins: int, sub: int,
-                 bn: int):
+def _hist_kernel(nv_ref, q_ref, x_ref, hist_ref, bmin_ref, *, bins: int,
+                 sub: int, bn: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -68,17 +81,24 @@ def _hist_kernel(nv_ref, q_ref, x_ref, hist_ref, *, bins: int, sub: int,
     bin_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bins), 2)
     base = j * bn
 
-    def body(s, acc):
+    def body(s, carry):
+        acc, bmin = carry
         xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
         dist = _tile_dist(q, xs, bins)
         gid = base + s * sub + jax.lax.broadcasted_iota(jnp.int32, (1, sub), 1)
         valid = gid < n_valid                                      # (1, sub)
         onehot = (dist[:, :, None] == bin_iota) & valid[:, :, None]
-        return acc + jnp.sum(onehot.astype(jnp.int32), axis=1)
+        acc = acc + jnp.sum(onehot.astype(jnp.int32), axis=1)
+        # invalid (padding) rows report bins: a fully-padded tile summarizes
+        # to bins > any possible r*, so pass 2 always skips it
+        bmin = jnp.minimum(bmin, jnp.min(jnp.where(valid, dist, bins)))
+        return acc, bmin
 
-    acc = jax.lax.fori_loop(0, bn // sub, body,
-                            jnp.zeros((bq, bins), jnp.int32))
+    acc, bmin = jax.lax.fori_loop(
+        0, bn // sub, body,
+        (jnp.zeros((bq, bins), jnp.int32), jnp.int32(bins)))
     hist_ref[...] += acc
+    bmin_ref[0, 0] = bmin
 
 
 @functools.partial(jax.jit, static_argnames=("bins", "bq", "bn", "sub",
@@ -86,10 +106,15 @@ def _hist_kernel(nv_ref, q_ref, x_ref, hist_ref, *, bins: int, sub: int,
 def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
                         n_valid: jax.Array | None = None,
                         bq: int = 64, bn: int = 1024, sub: int = 64,
-                        interpret: bool = False) -> jax.Array:
-    """q: (Q, W), x: (N, W) -> (Q, bins) int32 distance histogram.
+                        interpret: bool = False):
+    """q: (Q, W), x: (N, W) -> (hist (Q, bins) int32,
+    block_min (Q/bq, N/bn) int32).
 
-    Rows with global id >= n_valid (default N) are excluded exactly."""
+    ``hist`` is the per-query distance histogram; ``block_min`` is the
+    minimum valid distance within each (query-block, data-block) grid tile
+    (bins where a tile holds no valid row) — the pruning summary pass 2
+    consumes. Rows with global id >= n_valid (default N) are excluded
+    exactly from both outputs."""
     Q, W = q_packed.shape
     N, _ = x_packed.shape
     bq, bn = min(bq, Q), min(bn, N)
@@ -109,8 +134,15 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bq, bins), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((Q, bins), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((bq, bins), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, bins), jnp.int32),
+            jax.ShapeDtypeStruct((Q // bq, N // bn), jnp.int32),
+        ],
         interpret=interpret,
     )(nv, q32, x32)
 
@@ -119,8 +151,8 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
 # pass 2: re-stream + emit winners (the "reports")
 # ---------------------------------------------------------------------------
 
-def _emit_kernel(nv_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref, outi_ref,
-                 cnt_ref, *, bins: int, k: int, sub: int, bn: int):
+def _emit_kernel(nv_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref,
+                 outi_ref, cnt_ref, *, bins: int, k: int, sub: int, bn: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -129,47 +161,57 @@ def _emit_kernel(nv_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref, outi_ref,
         outi_ref[...] = jnp.zeros_like(outi_ref)
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    n_valid = nv_ref[0]
-    q = q_ref[...]                                  # (BQ, W)
-    x = x_ref[...]                                  # (BN, W)
     r_star = r_ref[...]                             # (BQ, 1)
-    n_lt_total = nlt_ref[...]                       # (BQ, 1)
-    bq = q.shape[0]
-    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
-    base = j * bn
 
-    def body(s, carry):
-        cnt_lt, cnt_tie, od, oi = carry
-        xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
-        dist = _tile_dist(q, xs, bins)                             # (BQ, sub)
-        gid = base + s * sub + jax.lax.broadcasted_iota(jnp.int32, (1, sub), 1)
-        valid = gid < n_valid                                      # (1, sub)
-        is_lt = valid & (dist < r_star)
-        is_tie = valid & (dist == r_star)
-        # slot of each winner: ids with dist < r* pack first (their global
-        # count is < k by construction of r*), r*-ties fill the remainder in
-        # index order; overflow ties land at slot k and match no output lane
-        rank_lt = cnt_lt + jnp.cumsum(is_lt.astype(jnp.int32), axis=1) - 1
-        rank_tie = (n_lt_total + cnt_tie
-                    + jnp.cumsum(is_tie.astype(jnp.int32), axis=1) - 1)
-        slot = jnp.where(is_lt, rank_lt, jnp.where(is_tie, rank_tie, k))
-        slot = jnp.minimum(slot, k)
-        onehot = (slot[:, :, None] == slot_iota).astype(jnp.int32)
-        od = od + jnp.sum(onehot * dist[:, :, None], axis=1)
-        oi = oi + jnp.sum(onehot * gid[:, :, None], axis=1)
-        cnt_lt = cnt_lt + jnp.sum(is_lt.astype(jnp.int32), axis=1,
-                                  keepdims=True)
-        cnt_tie = cnt_tie + jnp.sum(is_tie.astype(jnp.int32), axis=1,
-                                    keepdims=True)
-        return cnt_lt, cnt_tie, od, oi
+    # block-min pruning: if the nearest valid row in this tile is farther
+    # than the widest winning radius of any query in the block, no (q, x)
+    # pair here can emit — skip the re-stream entirely. Padded query rows
+    # carry r* = -1 and never raise the bound; skipping leaves the carried
+    # emit counts and all output slots untouched, so the skip is exact.
+    @pl.when(bm_ref[0, 0] <= jnp.max(r_star))
+    def _work():
+        n_valid = nv_ref[0]
+        q = q_ref[...]                              # (BQ, W)
+        x = x_ref[...]                              # (BN, W)
+        n_lt_total = nlt_ref[...]                   # (BQ, 1)
+        bq = q.shape[0]
+        slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+        base = j * bn
 
-    init = (cnt_ref[:, 0:1], cnt_ref[:, 1:2],
-            jnp.zeros((bq, k), jnp.int32), jnp.zeros((bq, k), jnp.int32))
-    cnt_lt, cnt_tie, od, oi = jax.lax.fori_loop(0, bn // sub, body, init)
-    outd_ref[...] += od
-    outi_ref[...] += oi
-    cnt_ref[:, 0:1] = cnt_lt
-    cnt_ref[:, 1:2] = cnt_tie
+        def body(s, carry):
+            cnt_lt, cnt_tie, od, oi = carry
+            xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
+            dist = _tile_dist(q, xs, bins)                         # (BQ, sub)
+            gid = base + s * sub + jax.lax.broadcasted_iota(
+                jnp.int32, (1, sub), 1)
+            valid = gid < n_valid                                  # (1, sub)
+            is_lt = valid & (dist < r_star)
+            is_tie = valid & (dist == r_star)
+            # slot of each winner: ids with dist < r* pack first (their
+            # global count is < k by construction of r*), r*-ties fill the
+            # remainder in index order; overflow ties land at slot k and
+            # match no output lane
+            rank_lt = cnt_lt + jnp.cumsum(is_lt.astype(jnp.int32), axis=1) - 1
+            rank_tie = (n_lt_total + cnt_tie
+                        + jnp.cumsum(is_tie.astype(jnp.int32), axis=1) - 1)
+            slot = jnp.where(is_lt, rank_lt, jnp.where(is_tie, rank_tie, k))
+            slot = jnp.minimum(slot, k)
+            onehot = (slot[:, :, None] == slot_iota).astype(jnp.int32)
+            od = od + jnp.sum(onehot * dist[:, :, None], axis=1)
+            oi = oi + jnp.sum(onehot * gid[:, :, None], axis=1)
+            cnt_lt = cnt_lt + jnp.sum(is_lt.astype(jnp.int32), axis=1,
+                                      keepdims=True)
+            cnt_tie = cnt_tie + jnp.sum(is_tie.astype(jnp.int32), axis=1,
+                                        keepdims=True)
+            return cnt_lt, cnt_tie, od, oi
+
+        init = (cnt_ref[:, 0:1], cnt_ref[:, 1:2],
+                jnp.zeros((bq, k), jnp.int32), jnp.zeros((bq, k), jnp.int32))
+        cnt_lt, cnt_tie, od, oi = jax.lax.fori_loop(0, bn // sub, body, init)
+        outd_ref[...] += od
+        outi_ref[...] += oi
+        cnt_ref[:, 0:1] = cnt_lt
+        cnt_ref[:, 1:2] = cnt_tie
 
 
 @functools.partial(jax.jit, static_argnames=("bins", "k", "bq", "bn", "sub",
@@ -177,12 +219,17 @@ def _emit_kernel(nv_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref, outi_ref,
 def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
                         r_star: jax.Array, n_lt: jax.Array, bins: int, k: int,
                         n_valid: jax.Array | None = None,
+                        block_min: jax.Array | None = None,
                         bq: int = 64, bn: int = 1024, sub: int = 64,
                         interpret: bool = False):
     """Emit the top-k winners given the pass-1 radius.
 
     q: (Q, W), x: (N, W); r_star/n_lt: (Q,) int32 — per-query k-th-smallest
     radius and count of rows with dist < r* (both from the pass-1 histogram).
+    ``block_min``: the (Q/bq, N/bn) int32 pruning summary from
+    ``hamming_hist_pallas`` — tiles whose min distance exceeds every r* in
+    their query block are skipped without recomputing a single distance.
+    None disables pruning (an all-zeros summary: every tile runs).
     Returns (dists (Q, k), ids (Q, k)) int32, slot-ordered (NOT distance
     sorted): slots [0, n_lt) hold dist < r* rows in index order, subsequent
     slots hold r*-ties in index order; untouched slots are 0 — the caller
@@ -196,6 +243,9 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
     x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
     nv = jnp.full((1,), N, jnp.int32) if n_valid is None else (
         jnp.asarray(n_valid, jnp.int32).reshape(1))
+    bm = (jnp.zeros((Q // bq, N // bn), jnp.int32) if block_min is None
+          else block_min.astype(jnp.int32))
+    assert bm.shape == (Q // bq, N // bn), (bm.shape, Q // bq, N // bn)
     r2 = r_star.astype(jnp.int32).reshape(Q, 1)
     nlt2 = n_lt.astype(jnp.int32).reshape(Q, 1)
 
@@ -205,6 +255,8 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
@@ -220,4 +272,4 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((bq, 2), jnp.int32)],
         interpret=interpret,
-    )(nv, q32, x32, r2, nlt2)
+    )(nv, bm, q32, x32, r2, nlt2)

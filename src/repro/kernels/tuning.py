@@ -13,6 +13,14 @@ that intermediate stays under ~2 MiB, keep bq a sublane multiple (8) and bn
 a lane multiple (128), and stream the dataset in the largest bn that still
 double-buffers. On CPU the kernels run interpreted (the grid lowers to an
 XLA loop), so smaller tiles bound trace size instead of VMEM.
+
+Since the fused select went single-shot (one Pallas grid owns ALL of N —
+no engine-side chunk scan), the heuristic is also grid-wide aware: N/bn is
+both the grid's streaming extent and the second dimension of the pass-1
+block-min pruning summary ((Q/bq, N/bn) int32, one SMEM scalar per grid
+cell). For large N we grow bn toward the code-tile VMEM budget so the
+summary footprint and per-query-block grid length stay bounded instead of
+scaling linearly with the datastore.
 """
 from __future__ import annotations
 
@@ -20,8 +28,19 @@ import jax
 
 _SUBLANE = 8
 _LANE = 128
-# per-cell budget for the (bq, sub, lanes) int32 one-hot intermediate
-_ONEHOT_BYTES = {"tpu": 2 << 20, "cpu": 1 << 20, "gpu": 1 << 20}
+# per-cell budget for the (bq, sub, lanes) int32 one-hot intermediate.
+# CPU runs interpreted: no VMEM to respect, and runtime scales with the
+# number of in-kernel iterations, so a fatter budget (bigger sub, fewer
+# fori steps) is strictly faster there.
+_ONEHOT_BYTES = {"tpu": 2 << 20, "cpu": 4 << 20, "gpu": 1 << 20}
+# single-shot grids: cap the N-block count (summary second dim / grid
+# extent per query block) by growing bn, up to this (bn, W) int32 code-tile
+# VMEM budget. On TPU the grid is a hardware loop, so the cap only bounds
+# the summary; interpreted (CPU) the grid UNROLLS into the program, so the
+# cap is much tighter there — the in-cell fori over bn/sub stays rolled,
+# making a big bn the cheap direction.
+_MAX_N_BLOCKS = {"tpu": 1024, "cpu": 16, "gpu": 1024}
+_CODE_TILE_BYTES = {"tpu": 4 << 20, "cpu": 1 << 20, "gpu": 2 << 20}
 
 
 def _round_up(n: int, m: int) -> int:
@@ -39,7 +58,8 @@ def topk_blocks(Q: int, N: int, W: int, lanes: int,
     ``lanes`` is the width of the per-element one-hot scatter: ``bins`` for
     the histogram pass, ``k`` for the emit pass. Both passes should be given
     the SAME (bq, bn, sub) (use lanes=max(bins, k)) so they stream the
-    dataset in identical tiles.
+    dataset in identical tiles — required for the block-min summary, whose
+    (Q/bq, N/bn) tiling must mean the same tiles in both passes.
     """
     backend = backend or jax.default_backend()
     budget = _ONEHOT_BYTES.get(backend, 1 << 20)
@@ -48,9 +68,25 @@ def topk_blocks(Q: int, N: int, W: int, lanes: int,
     # one-hot (bq, sub, lanes) int32 under budget; sub a sublane multiple
     sub = _round_down(budget // (4 * bq * max(lanes, 1)), _SUBLANE)
     sub = min(sub, 256)
+    # extreme lanes (bins or k in the thousands): the sublane floor on sub
+    # would silently bust the budget — shrink bq instead (it only amortizes
+    # the revisited output block). The (8, 8, lanes) floor is the hard
+    # minimum tile.
+    while bq > _SUBLANE and 4 * bq * sub * max(lanes, 1) > budget:
+        bq = _round_down(bq // 2, _SUBLANE)
     # stream the dataset in big tiles: amortize the revisited output block
     bn_cap = 2048 if backend == "tpu" else 512
     bn = min(_round_up(N, sub), _round_down(bn_cap, sub))
+    # single-shot whole-datastore grid: once N/bn exceeds the block cap the
+    # pruning summary and grid length dominate — grow bn (still a multiple
+    # of sub) until the block count is bounded or the code tile hits its
+    # VMEM budget
+    max_blocks = _MAX_N_BLOCKS.get(backend, 64)
+    if N > bn * max_blocks:
+        want = _round_up(-(-N // max_blocks), sub)
+        cap = _round_down(_CODE_TILE_BYTES.get(backend, 1 << 20)
+                          // (4 * max(W, 1)), sub)
+        bn = max(bn, min(want, cap))
     return bq, bn, sub
 
 

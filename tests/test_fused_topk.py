@@ -1,6 +1,8 @@
 """Fused two-pass Pallas top-k (hamming_topk + engine select="fused"):
 equivalence with the oracle and the materialized-distance paths, including
-the padding/masking edges the kernels handle internally."""
+the padding/masking edges the kernels handle internally; the single-shot
+contract (one hist + one emit pallas_call over the whole datastore, no
+scan, no merge) and block-min pruning on clustered datastores."""
 import numpy as np
 
 import jax.numpy as jnp
@@ -106,6 +108,85 @@ def test_engine_fused_bit_identical(n, q, d, k, chunk):
     ad, ai = engine.search_chunked(xp, qp, k, d, chunk=chunk, select="auto")
     fd, fi = engine.search_chunked(xp, qp, k, d, chunk=chunk, select="fused")
     assert (ad == fd).all() and (ai == fi).all()
+
+
+def test_single_shot_one_hist_one_emit(monkeypatch):
+    """select='fused' on N >> chunk must issue exactly one hist and one emit
+    pallas_call — no lax.scan over chunks, no merge_topk — and stay
+    bit-identical to counting_topk."""
+    from repro.kernels import ops as ops_mod
+
+    calls = {"hist": 0, "emit": 0}
+    real_hist, real_emit = ops_mod.hamming_hist_pallas, ops_mod.hamming_emit_pallas
+    monkeypatch.setattr(ops_mod, "hamming_hist_pallas",
+                        lambda *a, **kw: (calls.__setitem__("hist", calls["hist"] + 1),
+                                          real_hist(*a, **kw))[1])
+    monkeypatch.setattr(ops_mod, "hamming_emit_pallas",
+                        lambda *a, **kw: (calls.__setitem__("emit", calls["emit"] + 1),
+                                          real_emit(*a, **kw))[1])
+
+    def no_merge(*a, **kw):
+        raise AssertionError("merge_topk must not run on the fused path")
+
+    monkeypatch.setattr(topk, "merge_topk", no_merge)
+    xb, qb = _data(7, 3000, 4, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    fd, fi = engine.search_chunked(xp, qp, 8, 64, chunk=256, select="fused")
+    assert calls == {"hist": 1, "emit": 1}
+    cd, ci = topk.counting_topk(binary.hamming_ref(qb, xb), 8, 64)
+    assert (fd == cd).all() and (fi == ci).all()
+
+
+def test_fused_scan_matches_single_shot():
+    """The retained chunk-scanned variant stays bit-identical to the
+    single-shot path (and hence to every other select)."""
+    xb, qb = _data(11, 700, 4, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    fd, fi = engine.search_chunked(xp, qp, 9, 64, chunk=128, select="fused")
+    sd, si = engine.search_chunked(xp, qp, 9, 64, chunk=128,
+                                   select="fused_scan")
+    assert (fd == sd).all() and (fi == si).all()
+
+
+def test_clustered_prunes_most_blocks():
+    """Clustered/sorted datastore: one near cluster owns the top-k, so the
+    block-min guard must skip most pass-2 blocks — and results stay
+    bit-identical to counting_topk."""
+    rng = np.random.default_rng(8)
+    d, n, k = 128, 4096, 10
+    near = (rng.random((64, d)) < 0.05).astype(np.uint8)
+    far = (rng.random((n - 64, d)) < 0.9).astype(np.uint8)
+    xb = jnp.asarray(np.concatenate([near, far]), jnp.uint8)
+    qb = jnp.zeros((4, d), jnp.uint8)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    fd, fi, stats = ops.hamming_topk(qp, xp, k, d + 1, return_stats=True)
+    cd, ci = topk.counting_topk(binary.hamming_ref(qb, xb), k, d)
+    assert (fd == cd).all() and (fi == ci).all()
+    frac = float(stats["blocks_skipped"]) / stats["blocks_total"]
+    assert frac >= 0.5, f"pruned only {frac:.2f} of {stats['blocks_total']}"
+
+
+def test_uniform_data_prunes_nothing_and_stays_exact():
+    """Uniform random data: nothing is provably loser-only, so the guard
+    must pass (almost) every block through — exactness is the contract."""
+    xb, qb = _data(12, 1024, 8, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    fd, fi, stats = ops.hamming_topk(qp, xp, 16, 65, return_stats=True)
+    cd, ci = topk.counting_topk(binary.hamming_ref(qb, xb), 16, 64)
+    assert (fd == cd).all() and (fi == ci).all()
+    assert stats["block_min"].shape[1] == stats["blocks_total"] // stats["block_min"].shape[0]
+
+
+def test_k_exceeds_n_valid():
+    """k > n_valid < N: live slots match counting_topk over the valid
+    prefix; the rest are (bins, N) sentinels."""
+    xb, qb = _data(9, 256, 3, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    nv, k = 20, 32
+    cd, ci = topk.counting_topk(binary.hamming_ref(qb, xb[:nv]), k, 64)
+    fd, fi = ops.hamming_topk(qp, xp, k, 65, n_valid=nv)
+    assert (fd[:, :nv] == cd[:, :nv]).all() and (fi[:, :nv] == ci[:, :nv]).all()
+    assert (fd[:, nv:] == 65).all() and (fi[:, nv:] == 256).all()
 
 
 def test_engine_class_select_knob():

@@ -1,9 +1,11 @@
-"""kNN-LM retrieval layer: mixing math, datastore round-trip."""
+"""kNN-LM retrieval layer: mixing math, datastore round-trip, sentinel
+masking when fewer than k valid neighbors exist."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, scaled_down
+from repro.configs.base import RetrievalConfig
 from repro.core import retrieval
 
 
@@ -30,6 +32,28 @@ def test_datastore_retrieves_planted_neighbor():
     q = hidden[7:8]
     logp = retrieval.knn_logits(store, q, rcfg, cfg.vocab_size, temperature=1.0)
     assert int(jnp.argmax(logp[0])) == int(values[7])
+
+
+def test_knn_logits_sentinel_padding_gets_no_weight():
+    """k > N: the engine pads with sentinels (dist = d+1, id = N). Before
+    the validity mask they received softmax weight and ALL voted for
+    values[N-1]; now each real neighbor must get exactly its share."""
+    rcfg = RetrievalConfig(enabled=True, code_bits=32, k=16)
+    rng = np.random.default_rng(2)
+    hidden = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    values = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    store = retrieval.build_datastore(hidden, values, rcfg.code_bits,
+                                      itq_iters=2)
+    # near-infinite temperature -> uniform weight over every slot that
+    # counts: with the 12 sentinel slots masked out, each of the 4 real
+    # (distinct-valued) neighbors gets 1/4 — before the fix values[N-1]
+    # soaked up 13/16
+    for select in ("auto", "fused"):
+        logp = retrieval.knn_logits(store, hidden[:1], rcfg, vocab=16,
+                                    temperature=1e9, select=select)
+        p = np.asarray(jnp.exp(logp[0]))
+        np.testing.assert_allclose(p[[5, 6, 7, 8]], 0.25, atol=1e-4)
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-3)
 
 
 def test_synthetic_datastore_shapes():
