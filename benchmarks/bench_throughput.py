@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.util import row, time_jit
-from repro.core import binary, engine
+from repro.core import binary, engine, layout
 from repro.kernels import ops
 
 
@@ -123,3 +123,63 @@ def run(report):
                f"blocks_total={stats['blocks_total']};"
                f"speedup_vs_scan={scan_us/us:.2f}x;"
                f"n_q={nq_c};interpreted={int(interp)}"))
+
+    # layout-aware pruning on UNIFORM data (core/layout.py): the paired
+    # rows are the PR's claim — unordered uniform prunes ~nothing, the
+    # bucket-clustered reorder of the SAME codes prunes, and a masked
+    # index probe (nprobe < n_buckets) skips most pass-1 blocks outright.
+    # pruned_frac_p1 = tiles the enable mask excluded from pass 1;
+    # pruned_frac_p2 = tiles pass 2 skipped (mask composed with block-min).
+    d_u, n_u, nq_u, k_u = 128, 1 << 14, 8, 16
+    rng = np.random.default_rng(5)
+    xb_u = rng.integers(0, 2, (n_u, d_u)).astype(np.uint8)
+    center = rng.integers(0, 2, d_u)
+    qb_u = (center[None] ^ (rng.random((nq_u, d_u)) < 0.03)).astype(np.uint8)
+    xp_u = binary.pack_bits(jnp.asarray(xb_u))
+    qp_u = binary.pack_bits(jnp.asarray(qb_u))
+    lay = layout.build_layout(xp_u, d_u, n_buckets=16)
+    geom = dict(bq=8, bn=512, sub=256)
+
+    def fracs(stats):
+        tot = max(stats["blocks_total"], 1)
+        return (float(jax.device_get(stats["p1_blocks_skipped"])) / tot,
+                float(jax.device_get(stats["blocks_skipped"])) / tot)
+
+    _, _, s_u = ops.hamming_topk(qp_u, xp_u, k_u, d_u + 1,
+                                 return_stats=True, **geom)
+    p1_u, p2_u = fracs(s_u)
+    topk_u = jax.jit(functools.partial(ops.hamming_topk, k=k_u,
+                                       bins=d_u + 1, **geom))
+    us_u = time_jit(lambda: topk_u(qp_u, xp_u), warmup=wu, iters=it)
+    report(row("fig4/uniform_16k/fused_unordered", us_u,
+               f"qps={nq_u/us_u*1e6:.0f};pruned_frac_p1={p1_u:.3f};"
+               f"pruned_frac_p2={p2_u:.3f};n_q={nq_u};"
+               f"interpreted={int(interp)}"))
+
+    _, _, s_r = ops.hamming_topk(qp_u, lay.codes, k_u, d_u + 1,
+                                 return_stats=True, **geom)
+    p1_r, p2_r = fracs(s_r)
+    us_r = time_jit(lambda: topk_u(qp_u, lay.codes), warmup=wu, iters=it)
+    report(row("fig4/uniform_16k/fused_reordered", us_r,
+               f"qps={nq_u/us_r*1e6:.0f};pruned_frac_p1={p1_r:.3f};"
+               f"pruned_frac_p2={p2_r:.3f};"
+               f"speedup_vs_unordered={us_u/us_r:.2f}x;n_q={nq_u};"
+               f"interpreted={int(interp)}"))
+
+    # masked probe of the reordered store: each query probes its own
+    # Hamming-prefix bucket plus a neighbor (nprobe=2 of 16)
+    bits = (lay.n_buckets - 1).bit_length()
+    _, posx = layout.hamming_prefix_assign(xp_u, d_u, bits)
+    aq, _ = layout.hamming_prefix_assign(qp_u, d_u, bits, posx)
+    probe = jnp.stack([aq, (aq + 1) % lay.n_buckets], axis=1)
+    _, _, s_m = layout.masked_topk(lay, qp_u, k_u, d_u, probe=probe,
+                                   return_stats=True)
+    p1_m, p2_m = fracs(s_m)
+    masked = jax.jit(functools.partial(layout.masked_topk, lay, k=k_u,
+                                       d=d_u))
+    us_m = time_jit(lambda: masked(qp_u, probe=probe), warmup=wu, iters=it)
+    report(row("fig4/uniform_16k/masked_probe_np2", us_m,
+               f"qps={nq_u/us_m*1e6:.0f};pruned_frac_p1={p1_m:.3f};"
+               f"pruned_frac_p2={p2_m:.3f};nprobe=2;"
+               f"speedup_vs_full={us_r/us_m:.2f}x;n_q={nq_u};"
+               f"interpreted={int(interp)}"))

@@ -80,6 +80,18 @@ class RetrievalConfig:
     # "fused_scan" (see DESIGN.md decision table); orthogonal to the
     # distance method
     select: str = "auto"
+    # physical datastore layout (core/layout.py): "none" keeps insertion
+    # order; "hamming_prefix" bucket-clusters the packed codes at build
+    # time so the fused select's block-min pruning bites even on uniform
+    # data (single-device: a prebuilt layout on the DataStore; sharded:
+    # each shard re-sorts its local slice per call). Only the "fused"
+    # select consumes it — with any other select the prebuilt copy is
+    # idle memory, so pair layout != "none" with select="fused" (or a
+    # per-call select override)
+    layout: str = "none"
+    # bucket count for the layout ("hamming_prefix" rounds up to a power
+    # of two); 0 -> heuristic (~256 rows per bucket, layout.default_bits)
+    layout_buckets: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,5 +1,5 @@
 """The paper's primary contribution: binary-code similarity search with
 bounded-domain (temporal-sort-analogue) top-k, chunked scans, hierarchical
 distributed merge, spatial indexes, and kNN-LM retrieval integration."""
-from repro.core import (binary, engine, hierarchy, index, quantize, retrieval,  # noqa: F401
-                        topk)
+from repro.core import (binary, engine, hierarchy, index, layout, quantize,  # noqa: F401
+                        retrieval, topk)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import binary, topk
+from repro.core import binary, layout as layout_mod, topk
 
 
 class DistanceMethod:
@@ -146,17 +146,38 @@ def search_chunked(codes_packed: jax.Array, q_packed: jax.Array, k: int,
 
 
 class KNNEngine(NamedTuple):
-    """Immutable engine state (a pytree — jit/shard friendly)."""
+    """Immutable engine state (a pytree — jit/shard friendly).
+
+    ``layout``: optional bucket-clustered physical reorder of ``codes``
+    (core/layout.py). The fused select then streams the REORDERED codes —
+    similar codes share grid tiles, so block-min pruning bites even on
+    uniform data — and maps winners back to original ids; every other
+    select scans the original order. Build one with ``with_layout()``.
+    """
 
     codes: jax.Array          # (N, W) uint32 packed
     d: int                    # code bits
+    layout: Optional[layout_mod.BucketLayout] = None
 
     @property
     def n(self) -> int:
         return self.codes.shape[0]
 
+    def with_layout(self, n_buckets: int | None = None,
+                    assign: jax.Array | None = None) -> "KNNEngine":
+        """Engine with a bucket-clustered layout: by explicit bucket
+        ``assign`` (e.g. IVF cluster ids) or the pure-Hamming prefix
+        fallback (no float vectors needed)."""
+        lay = layout_mod.build_layout(self.codes, self.d,
+                                      n_buckets=n_buckets, assign=assign)
+        return self._replace(layout=lay)
+
     def search(self, q_packed: jax.Array, k: int, chunk: int = 1 << 16,
                method: str = DistanceMethod.XOR, select: str = "auto"):
+        if select == "fused" and self.layout is not None:
+            dd, ii = search_chunked(self.layout.codes, q_packed, k, self.d,
+                                    chunk, method, select=select)
+            return dd, layout_mod.to_original_ids(self.layout.perm, ii)
         return search_chunked(self.codes, q_packed, k, self.d, chunk, method,
                               select=select)
 
@@ -168,12 +189,19 @@ class KNNEngine(NamedTuple):
 def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
                    mesh: Mesh, axes: Sequence[str], k_local: Optional[int] = None,
                    chunk: int = 1 << 16, method: str = DistanceMethod.XOR,
-                   select: str = "auto"):
+                   select: str = "auto", reorder_local: bool = False):
     """Datastore sharded over ``axes`` (cardinality sharding); queries
     replicated. Each shard reports its local top-k' and the merge runs over
     the gathered (devices * k') candidates. With ``select="fused"`` every
     shard runs the single-shot two-pass select over its whole local slice
     (one hist + one emit invocation per shard, block-min pruning included).
+
+    ``reorder_local=True`` (fused only): each shard bucket-clusters its OWN
+    slice by a static Hamming key before the scan (``layout.local_sort`` —
+    trace-friendly, runs inside shard_map) and maps winners back to global
+    ids, so block-min pruning bites per shard even on uniform data. The
+    sort is recomputed per call; amortize by building the layout at
+    placement time (KNNEngine.with_layout) when the datastore is static.
 
     k_local < k trades exactness for an m/k' collective-bandwidth reduction
     with the accuracy model of core/hierarchy.py; k_local=None means k (exact).
@@ -191,8 +219,17 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
         flat = jnp.zeros((), jnp.int32)
         for a in axes:
             flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
-        ld, li = search_chunked(codes_loc, q, k_local, d, chunk, method,
-                                id_offset=flat * n_loc, select=select)
+        if reorder_local and select == "fused":
+            codes_l, perm_l = layout_mod.local_sort(codes_loc, d)
+            ld, li = search_chunked(codes_l, q, k_local, d, chunk, method,
+                                    select=select)
+            # local positions -> local ids -> global ids; local sentinels
+            # (pos == n_loc) become this shard's global sentinel, exactly
+            # like the unordered path
+            li = layout_mod.to_original_ids(perm_l, li) + flat * n_loc
+        else:
+            ld, li = search_chunked(codes_loc, q, k_local, d, chunk, method,
+                                    id_offset=flat * n_loc, select=select)
         # hierarchical merge: gather only k' candidates per shard
         gd = jax.lax.all_gather(ld, axes, tiled=False)   # (n_dev, Q, k')
         gi = jax.lax.all_gather(li, axes, tiled=False)

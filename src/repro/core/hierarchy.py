@@ -33,14 +33,24 @@ def failure_bound(k: int, r_groups: int, kprime: int) -> float:
 
 def failure_exact_mc(k: int, r_groups: int, kprime: int, trials: int = 10000,
                      seed: int = 0) -> float:
-    """Monte Carlo estimate of the exact failure probability."""
+    """Monte Carlo estimate of the exact failure probability.
+
+    Batched bincount (each trial's groups offset into its own id range)
+    instead of a Python loop of per-trial bincounts — same draws, same
+    estimate, ~trials-fold fewer interpreter round-trips. Batches are
+    capped so the counts matrix stays O(batch * r_groups), not
+    O(trials * r_groups)."""
     rng = np.random.default_rng(seed)
     groups = rng.integers(0, r_groups, size=(trials, k))
+    batch = max(1, min(trials, (1 << 22) // max(r_groups, 1)))
     fails = 0
-    for t in range(trials):
-        counts = np.bincount(groups[t], minlength=r_groups)
-        if counts.max() > kprime:
-            fails += 1
+    for t0 in range(0, trials, batch):
+        g = groups[t0:t0 + batch]
+        b = g.shape[0]
+        offsets = np.arange(b, dtype=np.int64)[:, None] * r_groups
+        counts = np.bincount((g + offsets).ravel(),
+                             minlength=b * r_groups).reshape(b, r_groups)
+        fails += int(np.sum(counts.max(axis=1) > kprime))
     return fails / trials
 
 

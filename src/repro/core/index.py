@@ -2,25 +2,34 @@
 LSH tables, and randomized kd-trees.
 
 As in the paper, index *traversal* is factored out of the scan engine: it
-selects candidate buckets, and the engine brute-force scans them. Bucket
-capacity plays the role of "one AP board configuration" — a sizing
-heuristic only: since the fused select went single-shot, the engine's
-chunk is a tuning knob of the materializing scans, not a capacity limit,
-and a bucket scan is one kernel invocation regardless. kd-tree
-construction/traversal run on the host (numpy), exactly the paper's
-host/accelerator split; k-means and LSH traversals are cheap dense ops and
-run on device.
+selects candidate buckets, and the engine scans them. Since the layout
+subsystem (core/layout.py) landed, bucket-contiguous indexes default to
+the **masked fused path**: the builder physically reorders the codes by
+bucket, traversal translates probed buckets into grid-block ranges, and
+the two-pass Pallas kernels scan ONLY the enabled tiles — no gathered
+(Q, C, W) candidate tensor, no bucket-capacity truncation (the layout
+holds every member; the capped ``buckets`` table survives for the legacy
+gather path and for mask building from multi-table candidates). The
+gather scan (``_scan_candidates``) remains as the reference path and for
+the host-traversed kd-trees. kd-tree construction/traversal run on the
+host (numpy), exactly the paper's host/accelerator split; k-means and LSH
+traversals are cheap dense ops and run on device.
+
+Masked-path semantics vs gather (see layout.py): the candidate set is the
+probed buckets rounded OUTWARD to data-block boundaries, unioned over each
+query block — a superset, so recall never drops; ties at equal distance
+break by layout position instead of candidate-list order.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import binary, topk
+from repro.core import binary, layout as layout_mod, topk
 
 
 def _pad_buckets(assign: np.ndarray, n_buckets: int, cap: int) -> np.ndarray:
@@ -50,6 +59,25 @@ def _scan_candidates(codes: jax.Array, q_packed: jax.Array, cand: jax.Array,
     return dd, ids
 
 
+def _dedup_candidates(cand: jax.Array) -> jax.Array:
+    """Mask repeated ids in a (Q, C) candidate list to -1 (padding).
+
+    Multi-table indexes emit the same id from several tables; left in, one
+    near neighbor occupies several top-k slots and silently evicts real
+    neighbors. Keeps the FIRST occurrence, so the surviving tie order is
+    unchanged. O(C log C) per row (sort + adjacent compare), no C^2
+    pairwise blow-up."""
+    rows = jnp.arange(cand.shape[0])[:, None]
+    # stable sort by value: among equals, the earliest list position wins
+    order = jnp.argsort(cand, axis=-1, stable=True)
+    sc = jnp.take_along_axis(cand, order, axis=-1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros_like(sc[:, :1], dtype=bool),
+         (sc[:, 1:] == sc[:, :-1]) & (sc[:, 1:] >= 0)], axis=-1)
+    dup = jnp.zeros_like(dup_sorted).at[rows, order].set(dup_sorted)
+    return jnp.where(dup, -1, cand)
+
+
 # ---------------------------------------------------------------------------
 # hierarchical k-means (IVF)
 # ---------------------------------------------------------------------------
@@ -59,11 +87,16 @@ class KMeansIndex(NamedTuple):
     buckets: jax.Array      # (C, cap) int32, -1 padded
     codes: jax.Array        # (N, W) packed
     d: int
+    layout: Optional[layout_mod.BucketLayout] = None  # cluster-contiguous
 
 
 def kmeans_build(data: jax.Array, codes: jax.Array, d: int, n_clusters: int,
                  iters: int = 10, capacity_factor: float = 2.0,
-                 key=None) -> KMeansIndex:
+                 key=None, reorder: bool = True) -> KMeansIndex:
+    """``reorder=True`` (default) also builds the cluster-contiguous layout
+    so ``kmeans_search`` drives the masked fused kernels; ``reorder=False``
+    keeps the gather-only index (e.g. when the codes array is shared and
+    must not be duplicated)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     data = data.astype(jnp.float32)
     n = data.shape[0]
@@ -83,17 +116,36 @@ def kmeans_build(data: jax.Array, codes: jax.Array, d: int, n_clusters: int,
     assign = np.asarray(jnp.argmin(d2, axis=1))
     cap = int(np.ceil(capacity_factor * n / n_clusters))
     table = _pad_buckets(assign, n_clusters, cap)
-    return KMeansIndex(centroids=cent, buckets=jnp.asarray(table), codes=codes, d=d)
+    lay = (layout_mod.reorder_by_assignment(codes, assign, n_clusters)
+           if reorder else None)
+    return KMeansIndex(centroids=cent, buckets=jnp.asarray(table), codes=codes,
+                       d=d, layout=lay)
 
 
 def kmeans_search(index: KMeansIndex, queries: jax.Array, q_packed: jax.Array,
-                  k: int, nprobe: int = 1):
+                  k: int, nprobe: int = 1, use_layout: bool | None = None,
+                  return_stats: bool = False):
     """Traverse: nearest nprobe centroids (a distance calc per node, as the
-    paper notes for k-means indexes); then scan the union of buckets."""
+    paper notes for k-means indexes); then scan the union of buckets.
+
+    With a layout (the default build), the probed buckets become an enable
+    mask over the reordered codes and the masked fused kernels scan only
+    those tiles — ``nprobe`` is a real throughput knob, not a gather width,
+    and buckets are scanned in FULL (no capacity truncation).
+    ``use_layout=False`` forces the legacy gather path (also the fallback
+    when the index has no layout); ``return_stats`` (masked path only)
+    appends the kernel pruning telemetry."""
     q = queries.astype(jnp.float32)
     cent = index.centroids
     d2 = (jnp.sum(q**2, 1)[:, None] - 2 * q @ cent.T + jnp.sum(cent**2, 1)[None])
     _, probe = jax.lax.top_k(-d2, nprobe)                     # (Q, nprobe)
+    if use_layout is None:
+        use_layout = index.layout is not None
+    if use_layout:
+        assert index.layout is not None, "index built with reorder=False"
+        return layout_mod.masked_topk(index.layout, q_packed, k, index.d,
+                                      probe=probe, return_stats=return_stats)
+    assert not return_stats, "stats only exist on the masked path"
     cand = index.buckets[probe].reshape(q.shape[0], -1)       # (Q, nprobe*cap)
     return _scan_candidates(index.codes, q_packed, cand, k, index.d)
 
@@ -107,6 +159,7 @@ class LSHIndex(NamedTuple):
     buckets: jax.Array      # (T, 2^b, cap) int32, -1 padded
     codes: jax.Array        # (N, W)
     d: int
+    layout: Optional[layout_mod.BucketLayout] = None  # table-0-contiguous
 
 
 def _hash_codes(codes_bits: jax.Array, bit_ids: jax.Array) -> jax.Array:
@@ -117,7 +170,8 @@ def _hash_codes(codes_bits: jax.Array, bit_ids: jax.Array) -> jax.Array:
 
 
 def lsh_build(codes: jax.Array, d: int, n_tables: int = 4, bits_per_table: int = 12,
-              capacity_factor: float = 4.0, key=None) -> LSHIndex:
+              capacity_factor: float = 4.0, key=None,
+              reorder: bool = True) -> LSHIndex:
     key = key if key is not None else jax.random.PRNGKey(1)
     n = codes.shape[0]
     assert bits_per_table <= d, (bits_per_table, d)
@@ -131,16 +185,45 @@ def lsh_build(codes: jax.Array, d: int, n_tables: int = 4, bits_per_table: int =
     cap = int(np.ceil(capacity_factor * n / n_buckets))
     tables = np.stack([_pad_buckets(keys[t], n_buckets, cap)
                        for t in range(n_tables)])
-    return LSHIndex(bit_ids=bit_ids, buckets=jnp.asarray(tables), codes=codes, d=d)
+    # only ONE table can be layout-contiguous; cluster by table 0's key —
+    # its probes become block RANGES, the other tables' members enable the
+    # blocks that hold them (layout.position_block_mask)
+    lay = (layout_mod.reorder_by_assignment(codes, keys[0], n_buckets)
+           if reorder else None)
+    return LSHIndex(bit_ids=bit_ids, buckets=jnp.asarray(tables), codes=codes,
+                    d=d, layout=lay)
 
 
-def lsh_search(index: LSHIndex, q_packed: jax.Array, k: int):
+def lsh_search(index: LSHIndex, q_packed: jax.Array, k: int,
+               use_layout: bool | None = None, return_stats: bool = False):
+    """Probe one bucket per table, then select over the union.
+
+    Masked path (default when the index has a layout): table 0's bucket is
+    a contiguous block range of the reordered codes; tables 1..T-1
+    contribute their (capped) members by position, enabling the blocks that
+    hold them. Duplicates across tables cost nothing — every enabled row is
+    scanned exactly once, so the dedup problem of the gather path cannot
+    occur by construction. Gather path: candidate lists are deduped
+    (``_dedup_candidates``) so a multi-table repeat cannot occupy several
+    top-k slots."""
     q_bits = binary.unpack_bits(q_packed, index.d)
     keys = _hash_codes(q_bits, index.bit_ids)                 # (T, Q)
     T = index.bit_ids.shape[0]
+    if use_layout is None:
+        use_layout = index.layout is not None
+    if use_layout:
+        assert index.layout is not None, "index built with reorder=False"
+        others = jnp.concatenate(
+            [index.buckets[t][keys[t]] for t in range(1, T)],
+            axis=-1) if T > 1 else None                       # (Q, (T-1)*cap)
+        return layout_mod.masked_topk(index.layout, q_packed, k, index.d,
+                                      probe=keys[0][:, None], cand_ids=others,
+                                      return_stats=return_stats)
+    assert not return_stats, "stats only exist on the masked path"
     cand = jnp.concatenate(
         [index.buckets[t][keys[t]] for t in range(T)], axis=-1)  # (Q, T*cap)
-    return _scan_candidates(index.codes, q_packed, cand, k, index.d)
+    return _scan_candidates(index.codes, q_packed, _dedup_candidates(cand),
+                            k, index.d)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ softmax.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -16,21 +17,39 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, RetrievalConfig
-from repro.core import binary, engine, quantize
+from repro.core import binary, engine, layout as layout_mod, quantize
 
 
 class DataStore(NamedTuple):
     codes: jax.Array        # (N, W) uint32 packed ITQ codes of hidden states
     values: jax.Array       # (N,) int32 next-token ids
     itq: quantize.ITQParams
+    # optional bucket-clustered reorder of codes (core/layout.py): the
+    # single-device fused select streams layout.codes and maps winners back
+    # to original ids, so `values` never needs reordering
+    layout: Optional[layout_mod.BucketLayout] = None
+
+
+def _maybe_layout(codes: jax.Array, code_bits: int, rcfg_layout: str,
+                  layout_buckets: int) -> Optional[layout_mod.BucketLayout]:
+    if rcfg_layout == "none":
+        return None
+    assert rcfg_layout == "hamming_prefix", rcfg_layout
+    return layout_mod.build_layout(codes, code_bits,
+                                   n_buckets=layout_buckets or None)
 
 
 def build_datastore(hidden: jax.Array, next_tokens: jax.Array, code_bits: int,
-                    itq_iters: int = 20, key=None) -> DataStore:
-    """hidden: (N, d_model) f32; next_tokens: (N,) int32."""
+                    itq_iters: int = 20, key=None, layout: str = "none",
+                    layout_buckets: int = 0) -> DataStore:
+    """hidden: (N, d_model) f32; next_tokens: (N,) int32. ``layout``/
+    ``layout_buckets`` follow RetrievalConfig's fields of the same name."""
     itq = quantize.itq_train(hidden, code_bits, iters=itq_iters, key=key)
     codes = binary.pack_bits(quantize.itq_encode(hidden, itq))
-    return DataStore(codes=codes, values=next_tokens.astype(jnp.int32), itq=itq)
+    return DataStore(codes=codes, values=next_tokens.astype(jnp.int32),
+                     itq=itq,
+                     layout=_maybe_layout(codes, code_bits, layout,
+                                          layout_buckets))
 
 
 def synthetic_datastore(cfg: ModelConfig, n: Optional[int] = None, key=None) -> DataStore:
@@ -47,7 +66,9 @@ def synthetic_datastore(cfg: ModelConfig, n: Optional[int] = None, key=None) -> 
         mean=jnp.zeros((cfg.d_model,), jnp.float32),
         proj=jnp.eye(cfg.d_model, r.code_bits, dtype=jnp.float32),
         rot=jnp.eye(r.code_bits, dtype=jnp.float32))
-    return DataStore(codes=codes, values=values, itq=itq)
+    return DataStore(codes=codes, values=values, itq=itq,
+                     layout=_maybe_layout(codes, r.code_bits, r.layout,
+                                          r.layout_buckets))
 
 
 def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
@@ -60,14 +81,43 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
     ``select`` overrides rcfg.select (the top-k path; "fused" streams the
     whole datastore through one two-pass Pallas invocation without ever
     materializing distances — ``rcfg.chunk_size`` only granulates the
-    materializing/'fused_scan' scans)."""
+    materializing/'fused_scan' scans). A layout (``store.layout``, or
+    ``rcfg.layout != "none"`` without one) is used by the fused select
+    only (other selects scan the original order): a prebuilt store layout
+    streams its reordered codes and maps winners back; without one the
+    codes are re-sorted per call by the same static Hamming key the
+    sharded path uses (``layout.local_sort``) — prebuild via
+    ``build_datastore(..., layout=...)`` to amortize. Sharded, a prebuilt
+    GLOBAL layout cannot follow the shard slicing, so per-shard re-sorting
+    happens per call and only when rcfg.layout asks for it — a prebuilt
+    store layout alone never opts the decode hot path into that cost."""
     select = rcfg.select if select is None else select
     q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
+    use_layout = select == "fused" and (store.layout is not None
+                                        or rcfg.layout != "none")
     if mesh is not None and axes:
         dists, ids = engine.search_sharded(
             store.codes, q_codes, rcfg.k, rcfg.code_bits, mesh, axes,
             k_local=rcfg.local_k, chunk=rcfg.chunk_size, method=method,
-            select=select)
+            select=select,
+            reorder_local=select == "fused" and rcfg.layout != "none")
+    elif use_layout:
+        if store.layout is not None:
+            codes, perm = store.layout.codes, store.layout.perm
+        else:
+            # honor the config, but not silently: this re-sorts the WHOLE
+            # datastore on every call (trace) — usually dwarfing the fused
+            # search it accelerates
+            warnings.warn(
+                "rcfg.layout != 'none' but the DataStore has no prebuilt "
+                "layout: re-sorting the datastore per call; build it once "
+                "with build_datastore(..., layout=rcfg.layout) to amortize",
+                stacklevel=2)
+            codes, perm = layout_mod.local_sort(store.codes, rcfg.code_bits)
+        dists, ids = engine.search_chunked(
+            codes, q_codes, rcfg.k, rcfg.code_bits,
+            chunk=rcfg.chunk_size, method=method, select=select)
+        ids = layout_mod.to_original_ids(perm, ids)
     else:
         dists, ids = engine.search_chunked(
             store.codes, q_codes, rcfg.k, rcfg.code_bits,

@@ -52,16 +52,30 @@ def hamming_distance(q_packed: jax.Array, x_packed: jax.Array,
     return out[:Q, :N]
 
 
+def topk_geometry(Q: int, N: int, W: int, lanes: int,
+                  bq: int | None = None, bn: int | None = None,
+                  sub: int | None = None):
+    """The padded grid geometry ``hamming_topk`` will run under:
+    (bq, bn, sub, q_pad, n_pad). ``lanes = max(bins, min(k, N))``.
+
+    Exposed so layout-aware callers (core/layout.py) can build a
+    (q_pad//bq, n_pad//bn) block mask that tiles EXACTLY like the kernels —
+    any drift between this and the internal prologue is a shape error, not
+    a silent mis-mask."""
+    hbq, hbn, hsub = tuning.topk_blocks(Q, N, W, lanes)
+    bq, bn, sub = bq or hbq, bn or hbn, sub or hsub
+    sub = min(sub, bn)
+    return bq, bn, sub, _round_up(Q, bq), _round_up(N, bn)
+
+
 def _topk_blocked(q_packed: jax.Array, x_packed: jax.Array, lanes: int,
                   bq: int | None, bn: int | None, sub: int | None):
     """Shared pad-to-blocks prologue for the two-pass kernels."""
     Q, W = q_packed.shape
     N = x_packed.shape[0]
-    hbq, hbn, hsub = tuning.topk_blocks(Q, N, W, lanes)
-    bq, bn, sub = bq or hbq, bn or hbn, sub or hsub
-    sub = min(sub, bn)
-    qp = _pad_rows(q_packed.astype(jnp.int32), _round_up(Q, bq))
-    xp = _pad_rows(x_packed.astype(jnp.int32), _round_up(N, bn))
+    bq, bn, sub, q_pad, n_pad = topk_geometry(Q, N, W, lanes, bq, bn, sub)
+    qp = _pad_rows(q_packed.astype(jnp.int32), q_pad)
+    xp = _pad_rows(x_packed.astype(jnp.int32), n_pad)
     return qp, xp, bq, bn, sub
 
 
@@ -86,6 +100,7 @@ def hamming_hist(q_packed: jax.Array, x_packed: jax.Array, bins: int,
 
 def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
                  n_valid: jax.Array | int | None = None,
+                 block_mask: jax.Array | None = None,
                  bq: int | None = None, bn: int | None = None,
                  sub: int | None = None, return_stats: bool = False):
     """Single-shot fused two-pass top-k over the WHOLE datastore:
@@ -104,11 +119,19 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
     broken by index order, rows beyond min(k, n_valid) padded with
     (bins, N). Rows with global id >= n_valid are excluded exactly.
 
+    ``block_mask``: optional (q_pad//bq, n_pad//bn) int32 enable mask over
+    the grid tiles (geometry from ``topk_geometry``): a zero tile is
+    outside the candidate set — pass 1 skips it outright and every query's
+    top-k is taken over the enabled rows only, the index-probing contract
+    of core/layout.py. Queries whose candidate count falls below k get
+    (bins, N) sentinels in the surplus slots, exactly like n_valid < k.
+
     ``return_stats=True`` additionally returns a dict with the pruning
-    telemetry: ``blocks_total`` (python int, grid tiles in pass 2),
-    ``blocks_skipped`` (traced int32 scalar, tiles the skip guard pruned —
-    padding-only tiles included, they always prune), and ``block_min`` (the
-    summary itself).
+    telemetry: ``blocks_total`` (python int, grid tiles per pass),
+    ``p1_blocks_skipped`` (traced int32, tiles the enable mask excluded
+    from pass 1), ``blocks_skipped`` (traced int32, tiles pass 2 pruned —
+    mask composed with the block-min guard; padding-only tiles included,
+    they always prune), and ``block_min`` (the summary itself).
     """
     Q, N = q_packed.shape[0], x_packed.shape[0]
     k_k = min(k, N)
@@ -118,6 +141,7 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
         if return_stats:
             return out + ({"blocks_total": 0,
                            "blocks_skipped": jnp.int32(0),
+                           "p1_blocks_skipped": jnp.int32(0),
                            "block_min": jnp.zeros((0, 0), jnp.int32)},)
         return out
     qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_packed,
@@ -127,12 +151,17 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
 
     # pass 1: the race -> per-query radius r*, the counts below it, and the
     # block-min summary pass 2 prunes with
-    hist, block_min = hamming_hist_pallas(qp, xp, bins, nv, bq=bq, bn=bn,
-                                          sub=sub, interpret=interp)
+    hist, block_min = hamming_hist_pallas(qp, xp, bins, nv,
+                                          block_mask=block_mask,
+                                          bq=bq, bn=bn, sub=sub,
+                                          interpret=interp)
     hist = hist[:Q]
     cum = jnp.cumsum(hist, axis=-1)
-    k_eff = jnp.minimum(k_k, nv)
-    r_star = jnp.argmax(cum >= k_eff, axis=-1).astype(jnp.int32)     # (Q,)
+    # per-query candidate count: n_valid when unmasked, the enabled-row
+    # count under a block mask — k_eff must follow it or candidates with
+    # dist > 0 would be dropped whenever a query sees fewer than k rows
+    k_eff = jnp.minimum(k_k, cum[:, -1])                             # (Q,)
+    r_star = jnp.argmax(cum >= k_eff[:, None], axis=-1).astype(jnp.int32)
     gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
     n_lt = jnp.where(r_star > 0, gather(cum, jnp.maximum(r_star - 1, 0)), 0)
     n_emit = jnp.minimum(gather(cum, r_star), k_eff)
@@ -143,6 +172,7 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
     nlt_p = jnp.pad(n_lt, (0, q_pad))
     out_d, out_i = hamming_emit_pallas(qp, xp, r_p, nlt_p, bins, k_k, nv,
                                        block_min=block_min,
+                                       block_mask=block_mask,
                                        bq=bq, bn=bn, sub=sub,
                                        interpret=interp)
     out_d, out_i = out_d[:Q], out_i[:Q]
@@ -156,12 +186,18 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
         out_d = jnp.pad(out_d, ((0, 0), (0, k - k_k)), constant_values=bins)
         out_i = jnp.pad(out_i, ((0, 0), (0, k - k_k)), constant_values=N)
     if return_stats:
-        # mirror the kernel's guard: a tile is skipped iff its min valid
-        # distance exceeds every r* in its query block
+        # mirror the kernels' guards: pass 1 skips mask-disabled tiles;
+        # pass 2 skips a tile iff it is disabled OR its min valid distance
+        # exceeds every r* in its query block (disabled tiles summarize to
+        # bins, so the bound alone would already skip them — keep the
+        # explicit composition anyway, it is the contract)
+        enabled = (jnp.ones_like(block_min) if block_mask is None
+                   else block_mask.astype(jnp.int32)) != 0
         max_r_b = jnp.max(r_p.reshape(-1, bq), axis=1)        # (Q_pad/bq,)
-        skipped = block_min > max_r_b[:, None]
+        skipped = (~enabled) | (block_min > max_r_b[:, None])
         return out_d, out_i, {"blocks_total": int(block_min.size),
                               "blocks_skipped": jnp.sum(skipped),
+                              "p1_blocks_skipped": jnp.sum(~enabled),
                               "block_min": block_min}
     return out_d, out_i
 
@@ -185,4 +221,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 __all__ = ["flash_attention", "hamming_distance", "hamming_hist",
-           "hamming_topk", "ref", "tuning"]
+           "hamming_topk", "ref", "topk_geometry", "tuning"]

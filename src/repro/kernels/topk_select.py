@@ -44,6 +44,17 @@ re-streamed XOR/popcount/scatter. On clustered or sorted datastores most
 pass-2 tiles skip. Skipping is exact — the emit counters only ever advance
 on winners, so an all-loser tile leaves every carried count and output slot
 untouched.
+
+Both kernels additionally take a per-(query-block, data-block) **enable
+mask** of the same (Q/BQ, N/BN) shape (one SMEM scalar per tile, all-ones
+when the caller passes none). A disabled tile is *outside the candidate
+set* — the index-probing contract of core/layout.py: pass 1 skips it
+outright (it contributes nothing to any histogram and summarizes to
+``bins``, so every query's r* is computed over the enabled rows only),
+and pass 2 composes the mask with the block-min bound. Because r* derives
+from the masked histogram, skipping disabled tiles in pass 2 is exact in
+the same sense as the block-min skip: no enabled (q, x) pair is ever
+dropped, disabled pairs were never candidates.
 """
 from __future__ import annotations
 
@@ -66,45 +77,53 @@ def _tile_dist(q, xs, bins: int):
 # pass 1: fused distance + histogram (the "race")
 # ---------------------------------------------------------------------------
 
-def _hist_kernel(nv_ref, q_ref, x_ref, hist_ref, bmin_ref, *, bins: int,
-                 sub: int, bn: int):
+def _hist_kernel(nv_ref, en_ref, q_ref, x_ref, hist_ref, bmin_ref, *,
+                 bins: int, sub: int, bn: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    n_valid = nv_ref[0]
-    q = q_ref[...]                                  # (BQ, W)
-    x = x_ref[...]                                  # (BN, W)
-    bq = q.shape[0]
-    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bins), 2)
-    base = j * bn
+    # a disabled tile is outside the candidate set: it contributes nothing
+    # to the histogram and summarizes to bins, so pass 2 skips it too
+    bmin_ref[0, 0] = jnp.int32(bins)
 
-    def body(s, carry):
-        acc, bmin = carry
-        xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
-        dist = _tile_dist(q, xs, bins)
-        gid = base + s * sub + jax.lax.broadcasted_iota(jnp.int32, (1, sub), 1)
-        valid = gid < n_valid                                      # (1, sub)
-        onehot = (dist[:, :, None] == bin_iota) & valid[:, :, None]
-        acc = acc + jnp.sum(onehot.astype(jnp.int32), axis=1)
-        # invalid (padding) rows report bins: a fully-padded tile summarizes
-        # to bins > any possible r*, so pass 2 always skips it
-        bmin = jnp.minimum(bmin, jnp.min(jnp.where(valid, dist, bins)))
-        return acc, bmin
+    @pl.when(en_ref[0, 0] != 0)
+    def _work():
+        n_valid = nv_ref[0]
+        q = q_ref[...]                              # (BQ, W)
+        x = x_ref[...]                              # (BN, W)
+        bq = q.shape[0]
+        bin_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bins), 2)
+        base = j * bn
 
-    acc, bmin = jax.lax.fori_loop(
-        0, bn // sub, body,
-        (jnp.zeros((bq, bins), jnp.int32), jnp.int32(bins)))
-    hist_ref[...] += acc
-    bmin_ref[0, 0] = bmin
+        def body(s, carry):
+            acc, bmin = carry
+            xs = jax.lax.dynamic_slice_in_dim(x, s * sub, sub, axis=0)
+            dist = _tile_dist(q, xs, bins)
+            gid = base + s * sub + jax.lax.broadcasted_iota(
+                jnp.int32, (1, sub), 1)
+            valid = gid < n_valid                                  # (1, sub)
+            onehot = (dist[:, :, None] == bin_iota) & valid[:, :, None]
+            acc = acc + jnp.sum(onehot.astype(jnp.int32), axis=1)
+            # invalid (padding) rows report bins: a fully-padded tile
+            # summarizes to bins > any possible r*, so pass 2 always skips it
+            bmin = jnp.minimum(bmin, jnp.min(jnp.where(valid, dist, bins)))
+            return acc, bmin
+
+        acc, bmin = jax.lax.fori_loop(
+            0, bn // sub, body,
+            (jnp.zeros((bq, bins), jnp.int32), jnp.int32(bins)))
+        hist_ref[...] += acc
+        bmin_ref[0, 0] = bmin
 
 
 @functools.partial(jax.jit, static_argnames=("bins", "bq", "bn", "sub",
                                              "interpret"))
 def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
                         n_valid: jax.Array | None = None,
+                        block_mask: jax.Array | None = None,
                         bq: int = 64, bn: int = 1024, sub: int = 64,
                         interpret: bool = False):
     """q: (Q, W), x: (N, W) -> (hist (Q, bins) int32,
@@ -114,7 +133,10 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
     minimum valid distance within each (query-block, data-block) grid tile
     (bins where a tile holds no valid row) — the pruning summary pass 2
     consumes. Rows with global id >= n_valid (default N) are excluded
-    exactly from both outputs."""
+    exactly from both outputs. ``block_mask``: (Q/bq, N/bn) int32 enable
+    mask (None = all tiles enabled); a zero tile is skipped outright — its
+    rows are outside the candidate set, so they are excluded from the
+    histogram and its summary entry is bins."""
     Q, W = q_packed.shape
     N, _ = x_packed.shape
     bq, bn = min(bq, Q), min(bn, N)
@@ -124,6 +146,9 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
     x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
     nv = jnp.full((1,), N, jnp.int32) if n_valid is None else (
         jnp.asarray(n_valid, jnp.int32).reshape(1))
+    en = (jnp.ones((Q // bq, N // bn), jnp.int32) if block_mask is None
+          else block_mask.astype(jnp.int32))
+    assert en.shape == (Q // bq, N // bn), (en.shape, Q // bq, N // bn)
 
     grid = (Q // bq, N // bn)
     return pl.pallas_call(
@@ -131,6 +156,8 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
         ],
@@ -144,15 +171,16 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
             jax.ShapeDtypeStruct((Q // bq, N // bn), jnp.int32),
         ],
         interpret=interpret,
-    )(nv, q32, x32)
+    )(nv, en, q32, x32)
 
 
 # ---------------------------------------------------------------------------
 # pass 2: re-stream + emit winners (the "reports")
 # ---------------------------------------------------------------------------
 
-def _emit_kernel(nv_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref,
-                 outi_ref, cnt_ref, *, bins: int, k: int, sub: int, bn: int):
+def _emit_kernel(nv_ref, en_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref,
+                 outd_ref, outi_ref, cnt_ref, *, bins: int, k: int, sub: int,
+                 bn: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -163,12 +191,13 @@ def _emit_kernel(nv_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref, outd_ref,
 
     r_star = r_ref[...]                             # (BQ, 1)
 
-    # block-min pruning: if the nearest valid row in this tile is farther
+    # block-min pruning composed with the enable mask: if the tile is
+    # outside the candidate set, or the nearest valid row in it is farther
     # than the widest winning radius of any query in the block, no (q, x)
     # pair here can emit — skip the re-stream entirely. Padded query rows
     # carry r* = -1 and never raise the bound; skipping leaves the carried
     # emit counts and all output slots untouched, so the skip is exact.
-    @pl.when(bm_ref[0, 0] <= jnp.max(r_star))
+    @pl.when((en_ref[0, 0] != 0) & (bm_ref[0, 0] <= jnp.max(r_star)))
     def _work():
         n_valid = nv_ref[0]
         q = q_ref[...]                              # (BQ, W)
@@ -220,6 +249,7 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
                         r_star: jax.Array, n_lt: jax.Array, bins: int, k: int,
                         n_valid: jax.Array | None = None,
                         block_min: jax.Array | None = None,
+                        block_mask: jax.Array | None = None,
                         bq: int = 64, bn: int = 1024, sub: int = 64,
                         interpret: bool = False):
     """Emit the top-k winners given the pass-1 radius.
@@ -230,6 +260,9 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
     ``hamming_hist_pallas`` — tiles whose min distance exceeds every r* in
     their query block are skipped without recomputing a single distance.
     None disables pruning (an all-zeros summary: every tile runs).
+    ``block_mask``: the same enable mask pass 1 ran under (None = all
+    enabled) — disabled tiles are outside the candidate set and never
+    emit. The two guards compose; pass the SAME mask to both passes.
     Returns (dists (Q, k), ids (Q, k)) int32, slot-ordered (NOT distance
     sorted): slots [0, n_lt) hold dist < r* rows in index order, subsequent
     slots hold r*-ties in index order; untouched slots are 0 — the caller
@@ -246,6 +279,9 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
     bm = (jnp.zeros((Q // bq, N // bn), jnp.int32) if block_min is None
           else block_min.astype(jnp.int32))
     assert bm.shape == (Q // bq, N // bn), (bm.shape, Q // bq, N // bn)
+    en = (jnp.ones((Q // bq, N // bn), jnp.int32) if block_mask is None
+          else block_mask.astype(jnp.int32))
+    assert en.shape == (Q // bq, N // bn), (en.shape, Q // bq, N // bn)
     r2 = r_star.astype(jnp.int32).reshape(Q, 1)
     nlt2 = n_lt.astype(jnp.int32).reshape(Q, 1)
 
@@ -255,6 +291,8 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), lambda i, j: (i, j),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
@@ -272,4 +310,4 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((bq, 2), jnp.int32)],
         interpret=interpret,
-    )(nv, bm, q32, x32, r2, nlt2)
+    )(nv, en, bm, q32, x32, r2, nlt2)

@@ -90,6 +90,25 @@ def topk_blocks(Q: int, N: int, W: int, lanes: int,
     return bq, bn, sub
 
 
+def layout_blocks(Q: int, N: int, W: int, lanes: int, bucket_rows: int,
+                  backend: str | None = None) -> tuple[int, int, int]:
+    """(bq, bn, sub) for the MASKED select over a bucket-clustered layout
+    (core/layout.py).
+
+    Same VMEM heuristic as ``topk_blocks``, but bn is additionally pulled
+    toward the bucket size (rounded up to a sub multiple — "round buckets
+    up to tile multiples"): the enable mask's granularity is the data
+    block, and a block much larger than a bucket drags several neighbor
+    buckets into every probe's candidate set, while a block much smaller
+    just grows the (tiny) mask. Overrides ``topk_blocks``'s large-N bn
+    growth when the two fight — mask resolution beats summary compactness
+    on the probed path (the mask IS the point there)."""
+    bq, bn, sub = topk_blocks(Q, N, W, lanes, backend=backend)
+    if bucket_rows and bucket_rows > 0:
+        bn = max(sub, min(bn, _round_up(bucket_rows, sub)))
+    return bq, bn, sub
+
+
 def distance_blocks(Q: int, N: int, W: int,
                     backend: str | None = None) -> tuple[int, int]:
     """(bq, bn) for the materializing (Q, N) distance kernel: the (bq, bn)

@@ -22,6 +22,21 @@ def test_failure_decreases_in_kprime(k, r):
     assert probs[-1] == 0.0          # k'=k is exact
 
 
+def test_mc_matches_per_trial_loop():
+    """The batched-bincount MC must be draw-for-draw identical to the
+    per-trial loop it replaced (same rng stream, same estimate)."""
+    import numpy as np
+
+    for (k, r, kp, seed) in [(16, 8, 2, 0), (4, 2, 1, 3), (32, 64, 3, 7),
+                             (2, 2, 2, 1)]:
+        rng = np.random.default_rng(seed)
+        groups = rng.integers(0, r, size=(500, k))
+        want = sum(1 for t in range(500)
+                   if np.bincount(groups[t], minlength=r).max() > kp) / 500
+        got = hierarchy.failure_exact_mc(k, r, kp, trials=500, seed=seed)
+        assert got == want, (k, r, kp, got, want)
+
+
 def test_recommended_kprime_meets_target():
     k, r = 16, 64
     kp = hierarchy.recommended_kprime(k, r, max_failure=0.01)

@@ -32,6 +32,30 @@ def test_kmeans_index_recall(clustered):
     assert _recall(ids, exact) > 0.6
 
 
+def test_kmeans_masked_recall_not_below_gather(clustered):
+    """The masked fused path scans probed buckets in FULL and rounds them
+    outward to block boundaries — its candidate set is a superset of the
+    gather path's capped buckets, so recall must not drop."""
+    x, codes, q, q_codes, exact = clustered
+    km = index.kmeans_build(jnp.asarray(x), codes, 64, 16, iters=8)
+    _, ids_m = index.kmeans_search(km, q, q_codes, 10, nprobe=4)
+    _, ids_g = index.kmeans_search(km, q, q_codes, 10, nprobe=4,
+                                   use_layout=False)
+    assert _recall(ids_m, exact) >= _recall(ids_g, exact) - 1e-9
+
+
+def test_kmeans_reorder_false_keeps_gather_only():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(500, 64)).astype(np.float32)
+    codes = binary.pack_bits(jnp.asarray((x > 0).astype(np.uint8)))
+    km = index.kmeans_build(jnp.asarray(x), codes, 64, 8, iters=4,
+                            reorder=False)
+    assert km.layout is None
+    dd, ids = index.kmeans_search(km, jnp.asarray(x[:4]), codes[:4], 5,
+                                  nprobe=2)
+    assert dd.shape == (4, 5)
+
+
 def test_kmeans_nprobe_monotone(clustered):
     """More probes -> no worse recall; probing everything recovers the exact
     *distances* (ids can differ inside Hamming tie groups)."""
@@ -53,6 +77,42 @@ def test_lsh_index_recall(clustered):
     lsh = index.lsh_build(codes, 64, n_tables=8, bits_per_table=4)
     _, ids = index.lsh_search(lsh, q_codes, 10)
     assert _recall(ids, exact) > 0.25
+
+
+def test_lsh_gather_dedup_regression(clustered):
+    """Querying with datastore members: the query's own code lands in its
+    bucket in EVERY table, so pre-dedup the same id could occupy several
+    top-k slots and evict real neighbors. After the fix, no id repeats
+    among the valid results of the gather path (or any path)."""
+    x, codes, q, q_codes, exact = clustered
+    lsh = index.lsh_build(codes, 64, n_tables=8, bits_per_table=4)
+    for use_layout in (False, True):
+        dd, ids = index.lsh_search(lsh, q_codes, 10, use_layout=use_layout)
+        ids = np.asarray(ids)
+        for r in range(ids.shape[0]):
+            valid = ids[r][ids[r] >= 0]
+            assert len(valid) == len(set(valid.tolist())), \
+                f"duplicate ids in row {r} (use_layout={use_layout})"
+        # self-query: each query is datastore row r, distance 0 -> slot 0
+        assert (np.asarray(dd)[:, 0] == 0).all()
+
+
+def test_dedup_candidates_keeps_first_occurrence():
+    cand = jnp.asarray([[7, 3, 7, -1, 3, 9], [1, 1, 1, 2, -1, -1]], jnp.int32)
+    out = np.asarray(index._dedup_candidates(cand))
+    assert (out == np.array([[7, 3, -1, -1, -1, 9],
+                             [1, -1, -1, 2, -1, -1]])).all()
+
+
+def test_lsh_masked_matches_gather_distance_quality(clustered):
+    """Masked LSH candidates are a superset of the (deduped) gather
+    candidates: per-slot distances can only improve (ascending lists,
+    element-wise <=)."""
+    x, codes, q, q_codes, exact = clustered
+    lsh = index.lsh_build(codes, 64, n_tables=4, bits_per_table=5)
+    md, _ = index.lsh_search(lsh, q_codes, 10)
+    gd, _ = index.lsh_search(lsh, q_codes, 10, use_layout=False)
+    assert (jnp.asarray(md) <= jnp.asarray(gd)).all()
 
 
 def test_kdtree_index_recall(clustered):

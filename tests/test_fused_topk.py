@@ -174,7 +174,62 @@ def test_uniform_data_prunes_nothing_and_stays_exact():
     fd, fi, stats = ops.hamming_topk(qp, xp, 16, 65, return_stats=True)
     cd, ci = topk.counting_topk(binary.hamming_ref(qb, xb), 16, 64)
     assert (fd == cd).all() and (fi == ci).all()
-    assert stats["block_min"].shape[1] == stats["blocks_total"] // stats["block_min"].shape[0]
+    # every block of diverse uniform data holds some near row for some
+    # query: the guard must not skip a single tile (no over-pruning)
+    assert int(stats["blocks_skipped"]) == 0
+    assert int(stats["p1_blocks_skipped"]) == 0
+
+
+def test_block_mask_restricts_candidate_set():
+    """An explicit enable mask must make the result the exact top-k over the
+    enabled blocks only — candidate-set semantics, not post-filtering: r*
+    derives from the masked histogram, so a query seeing < k rows emits
+    sentinels rather than stealing rows from disabled blocks."""
+    xb, qb = _data(13, 1024, 8, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    bq, bn, sub, q_pad, n_pad = ops.topk_geometry(8, 1024, 2, 65, bn=256)
+    nblk = n_pad // bn
+    assert nblk == 4
+    # enable blocks 1 and 3 -> rows [256, 512) u [768, 1024)
+    mask = jnp.asarray([[0, 1, 0, 1]], jnp.int32)
+    md, mi = ops.hamming_topk(qp, xp, 10, 65, block_mask=mask,
+                              bq=bq, bn=bn, sub=sub)
+    rows = np.r_[256:512, 768:1024]
+    dist = binary.hamming_ref(qb, xb[rows])
+    rd, ri = topk.counting_topk(dist, 10, 64)
+    ri = jnp.asarray(rows, jnp.int32)[ri]       # candidate slot -> global id
+    assert (md == rd).all() and (mi == ri).all()
+
+
+def test_block_mask_below_k_candidates_sentinels():
+    """Mask leaves fewer than k rows: live slots are the full enabled set,
+    the rest are (bins, N) sentinels — same contract as n_valid < k."""
+    xb, qb = _data(14, 1024, 4, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    bq, bn, sub, q_pad, n_pad = ops.topk_geometry(4, 1024, 2, 65, bn=256)
+    mask = jnp.zeros((q_pad // bq, n_pad // bn), jnp.int32).at[:, 2].set(1)
+    k = 300                                     # > 256 enabled rows
+    md, mi = ops.hamming_topk(qp, xp, k, 65, block_mask=mask,
+                              bq=bq, bn=bn, sub=sub)
+    dist = binary.hamming_ref(qb, xb[512:768])
+    rd, ri = topk.counting_topk(dist, k, 64)
+    assert (md[:, :256] == rd[:, :256]).all()
+    assert (mi[:, :256] == ri[:, :256] + 512).all()
+    assert (md[:, 256:] == 65).all() and (mi[:, 256:] == 1024).all()
+
+
+def test_block_mask_stats_report_both_passes():
+    xb, qb = _data(15, 2048, 8, 64)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    bq, bn, sub, q_pad, n_pad = ops.topk_geometry(8, 2048, 2, 65, bn=256)
+    nblk = n_pad // bn
+    mask = jnp.ones((q_pad // bq, nblk), jnp.int32).at[:, :nblk // 2].set(0)
+    _, _, stats = ops.hamming_topk(qp, xp, 8, 65, block_mask=mask,
+                                   bq=bq, bn=bn, sub=sub, return_stats=True)
+    assert int(stats["p1_blocks_skipped"]) == nblk // 2
+    # pass 2 composes the mask with block-min: at least the masked tiles
+    assert int(stats["blocks_skipped"]) >= nblk // 2
+    assert stats["blocks_total"] == nblk
 
 
 def test_k_exceeds_n_valid():
