@@ -49,8 +49,10 @@ def run(report):
         km, qq, qc, k, nprobe=2, use_layout=False))
     _, ids = km_gather(jnp.asarray(q), q_codes)
     us = time_jit(lambda: km_gather(jnp.asarray(q), q_codes))
+    plan_g = index.kmeans_plan(km, n_q, k, nprobe=2, use_layout=False)
     report(row("fig5/kmeans_ivf_gather", us,
-               f"recall={recall(ids):.3f};rel={base/us:.2f}x;nprobe=2"))
+               f"recall={recall(ids):.3f};rel={base/us:.2f}x;nprobe=2;"
+               f"plan={plan_g.compact()}"))
 
     km_masked = jax.jit(lambda qq, qc: index.kmeans_search(
         km, qq, qc, k, nprobe=2))
@@ -61,16 +63,26 @@ def run(report):
                / max(stats["blocks_total"], 1))
     us_m = time_jit(lambda: km_masked(jnp.asarray(q), q_codes))
     interp = int(jax.default_backend() != "tpu")
+    plan_m = index.kmeans_plan(km, n_q, k, nprobe=2)
     report(row("fig5/kmeans_ivf_masked", us_m,
                f"recall={recall(ids_m):.3f};rel={base/us_m:.2f}x;nprobe=2;"
                f"p1_skip={p1_skip:.3f};speedup_vs_gather={us/us_m:.2f}x;"
+               f"interpreted={interp};plan={plan_m.compact()}"))
+
+    # planner-chosen (masked) vs forced (gather) pair on identical probes:
+    # the planner's default must not regress against the forced legacy path
+    report(row("fig5/kmeans_planner_vs_forced", us_m,
+               f"plan={plan_m.compact()};forced=gather;"
+               f"speedup_vs_forced={us/us_m:.2f}x;nprobe=2;"
                f"interpreted={interp}"))
 
     lsh = index.lsh_build(codes, d, n_tables=4, bits_per_table=8)
     lsh_search = jax.jit(lambda qc: index.lsh_search(lsh, qc, k))
     _, ids = lsh_search(q_codes)
     us = time_jit(lambda: lsh_search(q_codes))
-    report(row("fig5/lsh", us, f"recall={recall(ids):.3f};rel={base/us:.2f}x"))
+    report(row("fig5/lsh", us,
+               f"recall={recall(ids):.3f};rel={base/us:.2f}x;"
+               f"plan={index.lsh_plan(lsh, n_q, k).compact()}"))
 
     kt = index.KDTreeIndex(x, codes, d, n_trees=4, leaf_size=512)
     _, ids = kt.search(q, q_codes, k)

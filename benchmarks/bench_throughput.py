@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.util import row, time_jit
-from repro.core import binary, engine, layout
+from repro.core import binary, engine, layout, plan as plan_mod
 from repro.kernels import ops
 
 
@@ -88,17 +88,23 @@ def run(report):
             engine.search_chunked, k=k, d=d, chunk=scan_chunk,
             select="fused_scan"))
         scan_us = time_jit(lambda: search_fs(xp, qf), warmup=wu, iters=it)
+        plan_fs = plan_mod.plan_local(plan_mod.stats_of(xp, qf, d), k,
+                                      select="fused_scan", chunk=scan_chunk)
         report(row(f"fig4/{label}/fused_scan_topk", scan_us,
                    f"qps={nq_f/scan_us*1e6:.0f};"
                    f"speedup_vs_xor={xor_us/scan_us:.2f}x;"
-                   f"chunk={scan_chunk};n_q={nq_f};interpreted={int(interp)}"))
+                   f"chunk={scan_chunk};n_q={nq_f};interpreted={int(interp)};"
+                   f"plan={plan_fs.compact()}"))
         search_f = jax.jit(functools.partial(
             engine.search_chunked, k=k, d=d, select="fused"))
         us = time_jit(lambda: search_f(xp, qf), warmup=wu, iters=it)
+        plan_f = plan_mod.plan_local(plan_mod.stats_of(xp, qf, d), k,
+                                     select="fused")
         report(row(f"fig4/{label}/fused_topk", us,
                    f"qps={nq_f/us*1e6:.0f};speedup_vs_xor={xor_us/us:.2f}x;"
                    f"speedup_vs_scan={scan_us/us:.2f}x;"
-                   f"n_q={nq_f};interpreted={int(interp)}"))
+                   f"n_q={nq_f};interpreted={int(interp)};"
+                   f"plan={plan_f.compact()}"))
 
     # block-min pruning on a clustered datastore: the single-shot pass 2
     # skips every (query-block, data-block) tile whose min distance exceeds
@@ -182,4 +188,21 @@ def run(report):
                f"qps={nq_u/us_m*1e6:.0f};pruned_frac_p1={p1_m:.3f};"
                f"pruned_frac_p2={p2_m:.3f};nprobe=2;"
                f"speedup_vs_full={us_r/us_m:.2f}x;n_q={nq_u};"
+               f"interpreted={int(interp)}"))
+
+    # planner-chosen vs forced-path pair: the same engine state searched
+    # through the planner (select="auto" resolves to fused over the
+    # prebuilt layout) and through the forced legacy path (fused over the
+    # UNORDERED codes — what the pre-planner engine silently ran). A
+    # planner-decision regression shows up as this ratio drifting < 1.
+    eng_l = engine.KNNEngine(codes=xp_u, d=d_u, layout=lay)
+    p_auto = eng_l.query_plan(qp_u, k_u)
+    auto_fn = jax.jit(functools.partial(eng_l.search, k=k_u))
+    us_auto = time_jit(lambda: auto_fn(qp_u), warmup=wu, iters=it)
+    forced_fn = jax.jit(functools.partial(
+        engine.search_chunked, k=k_u, d=d_u, select="fused"))
+    us_forced = time_jit(lambda: forced_fn(xp_u, qp_u), warmup=wu, iters=it)
+    report(row("fig4/uniform_16k/planner_vs_forced", us_auto,
+               f"plan={p_auto.compact()};forced=fused_unordered;"
+               f"speedup_vs_forced={us_forced/us_auto:.2f}x;n_q={nq_u};"
                f"interpreted={int(interp)}"))

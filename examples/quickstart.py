@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Covers the paper's full single-node pipeline: ITQ quantization (offline),
-bit packing, chunked Hamming scan with the counting-select (temporal-sort
-analogue) top-k, and an IVF index with host-side traversal.
+bit packing, a planner-built Hamming top-k (the QueryPlan IR of
+core/plan.py decides the select path and prints its ``explain()``), and an
+IVF index whose probes drive the masked fused kernels.
 """
 import numpy as np
 
@@ -30,10 +31,15 @@ def main():
     print(f"packed codes: {codes.shape} uint32 "
           f"({codes.size * 4 / feats.size / 4:.3f}x the float bytes)")
 
-    # 2. exact search: chunked scan + counting-select top-k
+    # 2. exact search through the query planner: the engine builds a
+    # QueryPlan (core/plan.py) from the datastore stats and executes it —
+    # explain() shows exactly what will run before any kernel launches
     queries = feats[:8]
     q_codes = binary.pack_bits(quantize.itq_encode(queries, itq))
-    dists, ids = engine.search_chunked(codes, q_codes, k, bits, chunk=1 << 14)
+    eng = engine.KNNEngine(codes=codes, d=bits)
+    print("\nfull-scan plan:")
+    print(eng.query_plan(q_codes, k, chunk=1 << 14).explain_str())
+    dists, ids = eng.search(q_codes, k, chunk=1 << 14)
     print("query 0 neighbors:", ids[0].tolist())
     print("query 0 distances:", dists[0].tolist())
 
@@ -47,6 +53,8 @@ def main():
     # the codes (core/layout.py); probed buckets become an enable mask over
     # the fused kernels' grid, so un-probed tiles are never streamed at all
     ivf = index.kmeans_build(feats, codes, bits, n_clusters=64, iters=8)
+    print("\nIVF probe plan:")
+    print(index.kmeans_plan(ivf, queries.shape[0], k, nprobe=4).explain_str())
     _, ivf_ids, stats = index.kmeans_search(ivf, queries, q_codes, k,
                                             nprobe=4, return_stats=True)
     recall_ivf = float(jnp.mean(jnp.any(

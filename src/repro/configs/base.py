@@ -77,8 +77,9 @@ class RetrievalConfig:
     # is a no-op for it
     chunk_size: int = 1 << 16
     # top-k select path: "auto" | "counting" | "bisect" | "fused" |
-    # "fused_scan" (see DESIGN.md decision table); orthogonal to the
-    # distance method
+    # "fused_scan" (see the generated decision table in DESIGN.md);
+    # orthogonal to the distance method. Legacy twin of ``plan`` below —
+    # both route through core/plan.py's planner ("auto" lets it resolve)
     select: str = "auto"
     # physical datastore layout (core/layout.py): "none" keeps insertion
     # order; "hamming_prefix" bucket-clusters the packed codes at build
@@ -92,6 +93,16 @@ class RetrievalConfig:
     # bucket count for the layout ("hamming_prefix" rounds up to a power
     # of two); 0 -> heuristic (~256 rows per bucket, layout.default_bits)
     layout_buckets: int = 0
+    # query planning (core/plan.py): "auto" lets the planner resolve the
+    # select/layout/merge stages from datastore stats; any concrete select
+    # path name ("composite" | "counting" | "bisect" | "fused" |
+    # "fused_scan") forces that stage through the same planner. Takes
+    # precedence over the legacy ``select`` field when not "auto".
+    plan: str = "auto"
+    # fine-grained forced-plan overrides applied after planning, e.g.
+    # "select=fused_scan,chunk=4096,layout=off" (see plan.parse_force);
+    # "" applies none. The escape hatch that replaces ad-hoc knobs.
+    force_plan: str = ""
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,5 +1,6 @@
-"""The kNN engine: chunked Hamming scan + bounded-domain top-k, single-device
-and mesh-distributed.
+"""The kNN engine: every search path is a thin plan-builder over the
+QueryPlan IR (core/plan.py) — the planner resolves the stages, the
+executor runs them.
 
 Structure mirrors the paper's system:
 
@@ -17,142 +18,65 @@ Structure mirrors the paper's system:
 * the distributed merge reports only each shard's local top-k'
   (``k_local``) == statistical activation reduction (§6.3); with
   ``k_local == k`` the result is exact.
+
+The decision logic — how ``select="auto"`` resolves, when a layout is
+streamed, when the sharded path reorders per shard — lives in
+``core/plan.py`` only; the legacy ``select=`` knob survives as a forced-
+plan override through the same planner (bit-identical, deprecation-nudged;
+see ``QueryPlan.explain()`` for what any call will actually run).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
-from repro.core import binary, layout as layout_mod, topk
+from repro.core import layout as layout_mod, plan as plan_mod
 
-
-class DistanceMethod:
-    XOR = "xor"          # bit-packed popcount (VPU; 32x less HBM traffic)
-    MXU = "mxu"          # +/-1 bf16 matmul (systolic array)
-    PALLAS = "pallas"    # fused Pallas kernel (kernels/hamming.py)
-
-
-def _distances(q_packed: jax.Array, chunk_codes: jax.Array, d: int,
-               method: str) -> jax.Array:
-    if method == DistanceMethod.XOR:
-        return binary.hamming_xor(q_packed, chunk_codes)
-    if method == DistanceMethod.MXU:
-        qb = binary.unpack_bits(q_packed, d)
-        xb = binary.unpack_bits(chunk_codes, d)
-        # bf16 hits the MXU on TPU; CPU has no native bf16 — use f32 there
-        dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
-        return binary.hamming_mxu(qb, xb, d, dtype=dt)
-    if method == DistanceMethod.PALLAS:
-        from repro.kernels import ops
-        return ops.hamming_distance(q_packed, chunk_codes)
-    raise ValueError(method)
-
-
-def _auto_chunk(chunk: int, d: int) -> int:
-    """Composite-key representability guard — the *auto* select only.
-
-    ``topk.composite_topk`` ranks by the f32 key ``dist * chunk + idx``,
-    which is exact only while (d + 1) * chunk < 2^24 (f32 mantissa).
-    Shrinking the chunk keeps auto on XLA's fast ``top_k`` path instead of
-    its bisect fallback — a performance choice, not a correctness one. The
-    other selects never build the key and are bit-identical at ANY chunk
-    size, so they scan at the caller's chunk unmodified."""
-    if (d + 1) * chunk < (1 << 24):
-        return chunk
-    return max(1024, ((1 << 24) // (d + 1)) // 1024 * 1024)
+# re-exported: the distance-method enum and composite-chunk guard moved to
+# the planner with the rest of the policy, but remain part of this module's
+# public surface
+DistanceMethod = plan_mod.DistanceMethod
+_auto_chunk = plan_mod._auto_chunk
 
 
 def search_chunked(codes_packed: jax.Array, q_packed: jax.Array, k: int,
-                   d: int, chunk: int = 1 << 16,
+                   d: int, chunk: int = plan_mod.DEFAULT_CHUNK,
                    method: str = DistanceMethod.XOR,
                    id_offset: jax.Array | int = 0,
                    select: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Search the datastore. codes: (N, W) uint32, q: (Q, W).
 
-    ``select``: 'auto' (composite-key fast path), 'counting' (histogram
-    counting select), 'bisect' (scatter-free counting select), 'fused'
-    (single-shot two-pass Pallas counting select: ONE hist + ONE emit
-    ``pallas_call`` own the entire datastore — no ``lax.scan``, no
-    ``merge_topk``, no (Q, N) distance matrix — with block-min pruning in
-    pass 2; orthogonal to ``method``, which it ignores), or 'fused_scan'
+    ``select``: 'auto' (planner-resolved; with no layout in sight it lands
+    on the composite-key fast path), or a forced path: 'counting'
+    (histogram counting select), 'bisect' (scatter-free counting select),
+    'fused' (single-shot two-pass Pallas counting select with block-min
+    pruning; orthogonal to ``method``, which it ignores), 'fused_scan'
     (the chunk-scanned variant of 'fused', for datastores that exceed what
     one invocation should address, e.g. codes paged in from host memory).
-    All five produce bit-identical results at any chunk size; ``chunk``
+    All paths produce bit-identical results at any chunk size; ``chunk``
     only sets the scan granularity of the materializing/'fused_scan' paths
-    ('fused' streams the whole datastore and tiles via kernels/tuning.py).
-    'auto' additionally shrinks its own chunk to keep its composite key
-    f32-representable (see ``_auto_chunk``).
+    (see the generated decision table in DESIGN.md).
     Returns (dists (Q,k) ascending, global ids (Q,k))."""
-    N, W = codes_packed.shape
-    Q = q_packed.shape[0]
-
-    if select == "fused":
-        from repro.kernels import ops
-
-        bd, bi = ops.hamming_topk(q_packed, codes_packed, k, d + 1)
-        return bd, bi + id_offset
-
-    chunk = min(chunk, N)
-    if select == "auto":
-        chunk = _auto_chunk(chunk, d)
-    n_chunks = (N + chunk - 1) // chunk
-    if N % chunk:
-        pad = n_chunks * chunk - N
-        # pad with all-ones codes at max distance; ids beyond N are masked by
-        # their distance landing at the back of the merge (the fused kernels
-        # mask them exactly via n_valid instead)
-        codes_packed = jnp.pad(codes_packed, ((0, pad), (0, 0)),
-                               constant_values=jnp.uint32(0xFFFFFFFF))
-    chunks = codes_packed.reshape(n_chunks, chunk, W)
-
-    if select == "fused_scan":
-        from repro.kernels import ops
-
-        def body(carry, xs):
-            best_d, best_i = carry
-            ci, codes_c = xs
-            n_valid = jnp.clip(N - ci * chunk, 0, chunk)
-            cd, cidx = ops.hamming_topk(q_packed, codes_c, min(k, chunk),
-                                        d + 1, n_valid=n_valid)
-            best_d, best_i = topk.merge_topk(best_d, best_i, cd,
-                                             cidx + ci * chunk, k)
-            return (best_d, best_i), None
-    else:
-        select_fn = {"auto": topk.composite_topk,
-                     "counting": topk.counting_topk,
-                     "bisect": topk.counting_topk_bisect}[select]
-
-        def body(carry, xs):
-            best_d, best_i = carry
-            ci, codes_c = xs
-            dist = _distances(q_packed, codes_c, d, method)
-            # padding rows (global id >= N) must rank strictly last — their
-            # all-ones codes can otherwise tie or beat real rows
-            gids = ci * chunk + jnp.arange(chunk)
-            dist = jnp.where(gids[None, :] < N, jnp.minimum(dist, d), d + 1)
-            cd, cidx = select_fn(dist, min(k, chunk), d + 1)
-            cids = cidx + ci * chunk
-            best_d, best_i = topk.merge_topk(best_d, best_i, cd, cids, k)
-            return (best_d, best_i), None
-
-    init = (jnp.full((Q, k), d + 1, jnp.int32), jnp.full((Q, k), N, jnp.int32))
-    (bd, bi), _ = jax.lax.scan(body, init, (jnp.arange(n_chunks), chunks))
-    return bd, bi + id_offset
+    if select != "auto":
+        plan_mod._warn_legacy("search_chunked", "select", select)
+    p = plan_mod.plan_local(plan_mod.stats_of(codes_packed, q_packed, d),
+                            k, select=select, method=method, chunk=chunk)
+    return plan_mod.execute(p, q_packed, codes=codes_packed,
+                            id_offset=id_offset)
 
 
 class KNNEngine(NamedTuple):
     """Immutable engine state (a pytree — jit/shard friendly).
 
     ``layout``: optional bucket-clustered physical reorder of ``codes``
-    (core/layout.py). The fused select then streams the REORDERED codes —
-    similar codes share grid tiles, so block-min pruning bites even on
-    uniform data — and maps winners back to original ids; every other
-    select scans the original order. Build one with ``with_layout()``.
+    (core/layout.py). Any select that RESOLVES to the fused path then
+    streams the REORDERED codes — similar codes share grid tiles, so
+    block-min pruning bites even on uniform data — and maps winners back
+    to original ids; the materializing selects scan the original order.
+    Build one with ``with_layout()``; inspect what a search will run with
+    ``query_plan(...).explain_str()``.
     """
 
     codes: jax.Array          # (N, W) uint32 packed
@@ -172,14 +96,28 @@ class KNNEngine(NamedTuple):
                                       n_buckets=n_buckets, assign=assign)
         return self._replace(layout=lay)
 
-    def search(self, q_packed: jax.Array, k: int, chunk: int = 1 << 16,
+    def query_plan(self, q_packed: jax.Array, k: int,
+                   chunk: int = plan_mod.DEFAULT_CHUNK,
+                   method: str = DistanceMethod.XOR, select: str = "auto",
+                   force=None) -> plan_mod.QueryPlan:
+        """The QueryPlan ``search`` will execute for these arguments —
+        ``select`` is resolved FIRST, so an ``"auto"`` that lands on the
+        fused path sees the layout (the former literal-string check lost
+        it)."""
+        stats = plan_mod.stats_of(self.codes, q_packed, self.d,
+                                  layout=self.layout)
+        return plan_mod.plan_local(stats, k, select=select, method=method,
+                                   chunk=chunk, force=force)
+
+    def search(self, q_packed: jax.Array, k: int,
+               chunk: int = plan_mod.DEFAULT_CHUNK,
                method: str = DistanceMethod.XOR, select: str = "auto"):
-        if select == "fused" and self.layout is not None:
-            dd, ii = search_chunked(self.layout.codes, q_packed, k, self.d,
-                                    chunk, method, select=select)
-            return dd, layout_mod.to_original_ids(self.layout.perm, ii)
-        return search_chunked(self.codes, q_packed, k, self.d, chunk, method,
-                              select=select)
+        if select != "auto":
+            plan_mod._warn_legacy("KNNEngine.search", "select", select)
+        p = self.query_plan(q_packed, k, chunk=chunk, method=method,
+                            select=select)
+        return plan_mod.execute(p, q_packed, codes=self.codes,
+                                layout=self.layout)
 
 
 # ---------------------------------------------------------------------------
@@ -188,61 +126,37 @@ class KNNEngine(NamedTuple):
 
 def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
                    mesh: Mesh, axes: Sequence[str], k_local: Optional[int] = None,
-                   chunk: int = 1 << 16, method: str = DistanceMethod.XOR,
+                   chunk: int = plan_mod.DEFAULT_CHUNK,
+                   method: str = DistanceMethod.XOR,
                    select: str = "auto", reorder_local: bool = False):
     """Datastore sharded over ``axes`` (cardinality sharding); queries
     replicated. Each shard reports its local top-k' and the merge runs over
-    the gathered (devices * k') candidates. With ``select="fused"`` every
+    the gathered (devices * k') candidates. With the fused select every
     shard runs the single-shot two-pass select over its whole local slice
     (one hist + one emit invocation per shard, block-min pruning included).
 
-    ``reorder_local=True`` (fused only): each shard bucket-clusters its OWN
-    slice by a static Hamming key before the scan (``layout.local_sort`` —
-    trace-friendly, runs inside shard_map) and maps winners back to global
-    ids, so block-min pruning bites per shard even on uniform data. The
-    sort is recomputed per call; amortize by building the layout at
-    placement time (KNNEngine.with_layout) when the datastore is static.
+    ``reorder_local=True`` (fused only — the planner drops it otherwise):
+    each shard bucket-clusters its OWN slice by a static Hamming key before
+    the scan (``layout.local_sort`` — trace-friendly, runs inside
+    shard_map) and maps winners back to global ids, so block-min pruning
+    bites per shard even on uniform data. The sort is recomputed per call;
+    amortize by building the layout at placement time
+    (KNNEngine.with_layout) when the datastore is static.
 
     k_local < k trades exactness for an m/k' collective-bandwidth reduction
     with the accuracy model of core/hierarchy.py; k_local=None means k (exact).
     """
-    k_local = k if k_local is None else k_local
+    if select != "auto":
+        plan_mod._warn_legacy("search_sharded", "select", select)
     axes = tuple(axes)
     n_dev = 1
     for a in axes:
         n_dev *= mesh.shape[a]
-    N = codes_packed.shape[0]
-    n_loc = N // n_dev
-
-    def local(codes_loc, q):
-        # flat shard index over the sharding axes
-        flat = jnp.zeros((), jnp.int32)
-        for a in axes:
-            flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
-        if reorder_local and select == "fused":
-            codes_l, perm_l = layout_mod.local_sort(codes_loc, d)
-            ld, li = search_chunked(codes_l, q, k_local, d, chunk, method,
-                                    select=select)
-            # local positions -> local ids -> global ids; local sentinels
-            # (pos == n_loc) become this shard's global sentinel, exactly
-            # like the unordered path
-            li = layout_mod.to_original_ids(perm_l, li) + flat * n_loc
-        else:
-            ld, li = search_chunked(codes_loc, q, k_local, d, chunk, method,
-                                    id_offset=flat * n_loc, select=select)
-        # hierarchical merge: gather only k' candidates per shard
-        gd = jax.lax.all_gather(ld, axes, tiled=False)   # (n_dev, Q, k')
-        gi = jax.lax.all_gather(li, axes, tiled=False)
-        gd = jnp.moveaxis(gd, 0, 1).reshape(q.shape[0], n_dev * k_local)
-        gi = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], n_dev * k_local)
-        sd, order = jax.lax.sort_key_val(gd, gi, dimension=-1)
-        return sd[:, :k], order[:, :k]
-
-    mapped = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None)),
-        out_specs=(P(None, None), P(None, None)))
-    return mapped(codes_packed, q_packed)
+    stats = plan_mod.stats_of(codes_packed, q_packed, d, n_shards=n_dev)
+    p = plan_mod.plan_sharded(stats, k, axes=axes, k_local=k_local,
+                              select=select, method=method, chunk=chunk,
+                              reorder_local=reorder_local)
+    return plan_mod.execute(p, q_packed, codes=codes_packed, mesh=mesh)
 
 
 def shard_datastore(codes_packed: jax.Array, mesh: Mesh, axes: Sequence[str]):

@@ -29,7 +29,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import binary, layout as layout_mod, topk
+from repro.core import binary, layout as layout_mod, plan as plan_mod
+
+# the gather-stage executor moved into the planner/executor module; kept
+# under its historical name for tests and host-traversed callers
+_scan_candidates = plan_mod.gather_scan
+
+
+def _index_stats(codes: jax.Array, d: int, layout, n_queries: int, k: int,
+                 kind: str, n_buckets: int = 0) -> plan_mod.StoreStats:
+    """StoreStats for an index-probed search (shared by every index kind)."""
+    return plan_mod.stats_for(codes.shape[0], d, codes.shape[1], n_queries,
+                              layout=layout, n_buckets=n_buckets, k=k,
+                              index=kind)
 
 
 def _pad_buckets(assign: np.ndarray, n_buckets: int, cap: int) -> np.ndarray:
@@ -41,22 +53,6 @@ def _pad_buckets(assign: np.ndarray, n_buckets: int, cap: int) -> np.ndarray:
             table[b, fill[b]] = i
             fill[b] += 1
     return table
-
-
-def _scan_candidates(codes: jax.Array, q_packed: jax.Array, cand: jax.Array,
-                     k: int, d: int):
-    """Brute-force scan of per-query candidate lists.
-
-    codes: (N, W); cand: (Q, C) int32 with -1 padding -> (dists, ids)."""
-    safe = jnp.maximum(cand, 0)
-    cand_codes = codes[safe]                                  # (Q, C, W)
-    x = jax.lax.bitwise_xor(q_packed[:, None, :], cand_codes)
-    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
-    dist = jnp.where(cand < 0, d + 1, dist)
-    dd, ii = topk.counting_topk(dist, k, d + 1)
-    ids = jnp.take_along_axis(cand, jnp.minimum(ii, cand.shape[1] - 1), axis=-1)
-    ids = jnp.where(dd > d, -1, ids)
-    return dd, ids
 
 
 def _dedup_candidates(cand: jax.Array) -> jax.Array:
@@ -122,32 +118,42 @@ def kmeans_build(data: jax.Array, codes: jax.Array, d: int, n_clusters: int,
                        d=d, layout=lay)
 
 
+def kmeans_plan(index: KMeansIndex, n_queries: int, k: int, nprobe: int = 1,
+                use_layout: bool | None = None) -> plan_mod.QueryPlan:
+    """The QueryPlan a ``kmeans_search`` with these arguments executes."""
+    stats = _index_stats(index.codes, index.d, index.layout, n_queries, k,
+                         "kmeans", n_buckets=index.centroids.shape[0])
+    return plan_mod.plan_index(stats, k, kind="kmeans", nprobe=nprobe,
+                               use_layout=use_layout)
+
+
 def kmeans_search(index: KMeansIndex, queries: jax.Array, q_packed: jax.Array,
                   k: int, nprobe: int = 1, use_layout: bool | None = None,
                   return_stats: bool = False):
     """Traverse: nearest nprobe centroids (a distance calc per node, as the
     paper notes for k-means indexes); then scan the union of buckets.
 
-    With a layout (the default build), the probed buckets become an enable
-    mask over the reordered codes and the masked fused kernels scan only
-    those tiles — ``nprobe`` is a real throughput knob, not a gather width,
-    and buckets are scanned in FULL (no capacity truncation).
-    ``use_layout=False`` forces the legacy gather path (also the fallback
-    when the index has no layout); ``return_stats`` (masked path only)
-    appends the kernel pruning telemetry."""
+    The planner (``kmeans_plan``) picks the candidate stage: with a layout
+    (the default build), the probed buckets become an enable mask over the
+    reordered codes and the masked fused kernels scan only those tiles —
+    ``nprobe`` is a real throughput knob, not a gather width, and buckets
+    are scanned in FULL (no capacity truncation). ``use_layout=False`` is
+    the legacy forced-gather override (also the planner's fallback when the
+    index has no layout); ``return_stats`` (masked path only) appends the
+    kernel pruning telemetry."""
+    if use_layout is not None:
+        plan_mod._warn_legacy("kmeans_search", "use_layout", use_layout)
     q = queries.astype(jnp.float32)
     cent = index.centroids
     d2 = (jnp.sum(q**2, 1)[:, None] - 2 * q @ cent.T + jnp.sum(cent**2, 1)[None])
     _, probe = jax.lax.top_k(-d2, nprobe)                     # (Q, nprobe)
-    if use_layout is None:
-        use_layout = index.layout is not None
-    if use_layout:
-        assert index.layout is not None, "index built with reorder=False"
-        return layout_mod.masked_topk(index.layout, q_packed, k, index.d,
-                                      probe=probe, return_stats=return_stats)
-    assert not return_stats, "stats only exist on the masked path"
+    p = kmeans_plan(index, q.shape[0], k, nprobe=nprobe, use_layout=use_layout)
+    if p.candidates.kind == "block_mask":
+        return plan_mod.execute(p, q_packed, layout=index.layout, probe=probe,
+                                return_stats=return_stats)
     cand = index.buckets[probe].reshape(q.shape[0], -1)       # (Q, nprobe*cap)
-    return _scan_candidates(index.codes, q_packed, cand, k, index.d)
+    return plan_mod.execute(p, q_packed, codes=index.codes, cand=cand,
+                            return_stats=return_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -194,36 +200,46 @@ def lsh_build(codes: jax.Array, d: int, n_tables: int = 4, bits_per_table: int =
                     d=d, layout=lay)
 
 
+def lsh_plan(index: LSHIndex, n_queries: int, k: int,
+             use_layout: bool | None = None) -> plan_mod.QueryPlan:
+    """The QueryPlan an ``lsh_search`` with these arguments executes."""
+    stats = _index_stats(index.codes, index.d, index.layout, n_queries, k,
+                         "lsh", n_buckets=index.buckets.shape[1])
+    return plan_mod.plan_index(stats, k, kind="lsh",
+                               n_tables=index.bit_ids.shape[0],
+                               use_layout=use_layout)
+
+
 def lsh_search(index: LSHIndex, q_packed: jax.Array, k: int,
                use_layout: bool | None = None, return_stats: bool = False):
     """Probe one bucket per table, then select over the union.
 
-    Masked path (default when the index has a layout): table 0's bucket is
-    a contiguous block range of the reordered codes; tables 1..T-1
-    contribute their (capped) members by position, enabling the blocks that
-    hold them. Duplicates across tables cost nothing — every enabled row is
-    scanned exactly once, so the dedup problem of the gather path cannot
-    occur by construction. Gather path: candidate lists are deduped
-    (``_dedup_candidates``) so a multi-table repeat cannot occupy several
-    top-k slots."""
+    Masked path (the planner's default when the index has a layout):
+    table 0's bucket is a contiguous block range of the reordered codes;
+    tables 1..T-1 contribute their (capped) members by position, enabling
+    the blocks that hold them. Duplicates across tables cost nothing —
+    every enabled row is scanned exactly once, so the dedup problem of the
+    gather path cannot occur by construction. Gather path: candidate lists
+    are deduped (``_dedup_candidates``) so a multi-table repeat cannot
+    occupy several top-k slots."""
+    if use_layout is not None:
+        plan_mod._warn_legacy("lsh_search", "use_layout", use_layout)
     q_bits = binary.unpack_bits(q_packed, index.d)
     keys = _hash_codes(q_bits, index.bit_ids)                 # (T, Q)
     T = index.bit_ids.shape[0]
-    if use_layout is None:
-        use_layout = index.layout is not None
-    if use_layout:
-        assert index.layout is not None, "index built with reorder=False"
+    p = lsh_plan(index, q_packed.shape[0], k, use_layout=use_layout)
+    if p.candidates.kind == "block_mask":
         others = jnp.concatenate(
             [index.buckets[t][keys[t]] for t in range(1, T)],
             axis=-1) if T > 1 else None                       # (Q, (T-1)*cap)
-        return layout_mod.masked_topk(index.layout, q_packed, k, index.d,
-                                      probe=keys[0][:, None], cand_ids=others,
-                                      return_stats=return_stats)
-    assert not return_stats, "stats only exist on the masked path"
+        return plan_mod.execute(p, q_packed, layout=index.layout,
+                                probe=keys[0][:, None], cand_ids=others,
+                                return_stats=return_stats)
     cand = jnp.concatenate(
         [index.buckets[t][keys[t]] for t in range(T)], axis=-1)  # (Q, T*cap)
-    return _scan_candidates(index.codes, q_packed, _dedup_candidates(cand),
-                            k, index.d)
+    return plan_mod.execute(p, q_packed, codes=index.codes,
+                            cand=_dedup_candidates(cand),
+                            return_stats=return_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -272,4 +288,9 @@ class KDTreeIndex:
             ids = np.unique(np.concatenate(
                 [self._traverse(t, q) for t in self.trees]))[:cap]
             cand[qi, :len(ids)] = ids
-        return _scan_candidates(self.codes, q_packed, jnp.asarray(cand), k, self.d)
+        stats = _index_stats(self.codes, self.d, None, len(queries), k,
+                             "kdtree")
+        p = plan_mod.plan_index(stats, k, kind="kdtree",
+                                n_tables=len(self.trees))
+        return plan_mod.execute(p, q_packed, codes=self.codes,
+                                cand=jnp.asarray(cand))

@@ -1,0 +1,931 @@
+"""QueryPlan IR: one planner and one executor behind every search path.
+
+The paper's AP pipeline is explicitly staged — route the query macro, race
+the Hamming counters, report winners through the temporal top-k. This
+reproduction grew the equivalent stages as ad-hoc knobs (``select=``,
+``use_layout=``, ``chunk``, gather-vs-masked, sharded-vs-local) whose
+resolution logic was duplicated across ``core/engine.py``,
+``core/retrieval.py`` and ``core/index.py`` — and subtly inconsistent
+(``KNNEngine.search`` tested the literal string ``"fused"`` before
+resolving ``"auto"``, silently dropping the layout). This module makes the
+plan a first-class object instead:
+
+* **IR** — a :class:`QueryPlan` of four typed stages:
+  :class:`ProbeStage` (index traversal), :class:`CandidateStage` (how the
+  candidate set is restricted: full scan, per-tile block mask, or gathered
+  id lists — and which physical layout the scan streams),
+  :class:`SelectStage` (the top-k select path + its scan granularity), and
+  :class:`MergeStage` (the sharded hierarchical top-k' merge).
+* **Planner** — ``plan_local`` / ``plan_sharded`` / ``plan_index`` inspect
+  :class:`StoreStats` (N, d, W, query batch, layout presence, index kind,
+  shard count, backend) and emit a plan; ``resolve_select`` is THE place
+  ``"auto"`` becomes a concrete path. Legacy forced knobs route through the
+  same functions as forced-plan overrides (``parse_force`` /
+  ``RetrievalConfig.force_plan``) and stay bit-identical.
+* **Executor** — :func:`execute` runs a plan over concrete arrays. The
+  stage bodies are the former ``engine.search_chunked`` /
+  ``engine.search_sharded`` / ``index._scan_candidates`` code moved here
+  verbatim, so every legacy entry point is a thin plan-builder with
+  bit-identical results (pinned by ``tests/test_plan.py``).
+* **Explain** — ``QueryPlan.explain()`` returns a JSON-able summary
+  (stages, chosen kernels, block geometry + cost hints from
+  ``kernels/tuning.py``, predicted pruning, decision reason);
+  ``explain_str()`` renders it for humans, ``compact()`` is a one-token
+  form safe for benchmark ``derived`` fields.
+* **Decision table** — ``python -m repro.core.plan --table`` dumps the
+  planner's rules as a markdown table over canonical scenarios; DESIGN.md
+  embeds the generated table and ``--check-design`` fails on drift (CI's
+  plan-smoke step).
+
+Every future scaling PR (async batching, caching, multi-backend) extends
+this by adding a stage or a planner rule, not another knob.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import difflib
+import json
+import sys
+import warnings
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import binary, layout as layout_mod, topk
+
+DEFAULT_CHUNK = 1 << 16
+
+# concrete select paths the IR can name; "auto" is a REQUEST that
+# resolve_select turns into one of these ("composite" is the old literal
+# "auto": XLA top_k over the f32 composite key)
+SELECT_PATHS = ("composite", "counting", "bisect", "fused", "fused_scan")
+# accepted request aliases -> IR path ("auto" resolves by rule instead)
+_SELECT_ALIASES = {"auto": "auto", "composite": "composite",
+                   "counting": "counting", "bisect": "bisect",
+                   "fused": "fused", "fused_scan": "fused_scan"}
+
+
+class DistanceMethod:
+    XOR = "xor"          # bit-packed popcount (VPU; 32x less HBM traffic)
+    MXU = "mxu"          # +/-1 bf16 matmul (systolic array)
+    PALLAS = "pallas"    # fused Pallas kernel (kernels/hamming.py)
+
+
+# ---------------------------------------------------------------------------
+# the IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProbeStage:
+    """Index traversal: which buckets/leaves feed the candidate stage."""
+
+    kind: str = "none"          # none | kmeans | lsh | kdtree
+    nprobe: int = 0             # probed buckets per query (kmeans)
+    n_tables: int = 0           # hash tables probed (lsh)
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateStage:
+    """How the candidate set is restricted, and over which physical layout.
+
+    ``kind``: "full" scans every row; "block_mask" turns probed buckets
+    into the fused kernels' per-tile enable mask (core/layout.py);
+    "gather" materializes per-query candidate-id lists and scans those.
+    ``layout``: "none" streams insertion order; "prebuilt" streams a
+    BucketLayout's reordered codes (winners map back through the
+    permutation); "local_sort" re-sorts per call/shard by a static Hamming
+    key (trace-friendly, runs inside shard_map).
+    """
+
+    kind: str = "full"          # full | block_mask | gather
+    layout: str = "none"        # none | prebuilt | local_sort
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectStage:
+    """The top-k select path (see the generated decision table)."""
+
+    path: str = "composite"     # one of SELECT_PATHS
+    method: str = DistanceMethod.XOR  # distance method, materializing paths
+    chunk: int = DEFAULT_CHUNK  # scan granularity (ignored by "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeStage:
+    """Distributed hierarchical top-k' merge (statistical reduction)."""
+
+    kind: str = "none"          # none | sharded
+    k_local: int = 0            # per-shard k' (k_local == k is exact)
+    axes: Tuple[str, ...] = ()
+    reorder_local: bool = False  # per-shard local_sort before the scan
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStats:
+    """What the planner inspects — static facts about one search call."""
+
+    n: int                      # datastore rows
+    d: int                      # code bits
+    w: int                      # packed words per code
+    q: int                      # query batch size
+    k: int = 0                  # requested neighbors (informational)
+    has_layout: bool = False    # a prebuilt BucketLayout exists
+    mean_bucket_rows: int = 0   # layout bucket size (mask geometry hint)
+    n_buckets: int = 0
+    index: str = "none"         # none | kmeans | lsh | kdtree
+    n_shards: int = 1
+    backend: str = ""           # "" -> jax.default_backend() at explain time
+
+
+def stats_for(n: int, d: int, w: int, q: int, *,
+              layout: Optional[layout_mod.BucketLayout] = None,
+              n_buckets: Optional[int] = None, **kw) -> StoreStats:
+    """StoreStats from counts; THE place layout fields are derived, so a
+    new planner-consulted field is threaded exactly once (stats_of,
+    index._index_stats and retrieval.plan_for_store all funnel here).
+    ``n_buckets`` overrides the layout's (e.g. an index's centroid count)."""
+    if n_buckets is None:
+        n_buckets = layout.n_buckets if layout is not None else 0
+    return StoreStats(
+        n=n, d=d, w=w, q=q, has_layout=layout is not None,
+        mean_bucket_rows=layout.mean_bucket_rows if layout is not None else 0,
+        n_buckets=n_buckets, **kw)
+
+
+def stats_of(codes: jax.Array, q_packed: jax.Array, d: int,
+             layout: Optional[layout_mod.BucketLayout] = None,
+             **kw) -> StoreStats:
+    """StoreStats from concrete arrays (shapes are static under jit)."""
+    return stats_for(codes.shape[0], d, codes.shape[1], q_packed.shape[0],
+                     layout=layout, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One search, fully decided: Probe -> Candidates -> Select -> Merge."""
+
+    probe: ProbeStage
+    candidates: CandidateStage
+    select: SelectStage
+    merge: MergeStage
+    n: int
+    d: int
+    w: int
+    q: int
+    k: int
+    n_shards: int = 1
+    mean_bucket_rows: int = 0   # mask-geometry hint (block_mask plans)
+    backend: str = ""
+    reason: str = ""            # why the planner chose this / fallback note
+
+    # -- summaries ---------------------------------------------------------
+
+    def compact(self) -> str:
+        """One token, safe for benchmark ``derived`` fields (no , ; =)."""
+        p = self.probe.kind
+        if self.probe.nprobe:
+            p += f"@{self.probe.nprobe}"
+        c = self.candidates.kind
+        if self.candidates.layout != "none":
+            c += f"+{self.candidates.layout}"
+        s = self.select.path
+        m = self.merge.kind
+        if self.merge.kind == "sharded":
+            m += f"@k{self.merge.k_local}"
+        return f"probe:{p}|cand:{c}|select:{s}|merge:{m}"
+
+    def _kernels(self) -> Tuple[str, ...]:
+        if self.candidates.kind == "gather":
+            return ("xor+popcount gather", "topk.counting_topk")
+        path = self.select.path
+        if path in ("fused", "fused_scan"):
+            ks = ("kernels.topk_select.hamming_hist_pallas",
+                  "kernels.topk_select.hamming_emit_pallas")
+            if path == "fused_scan":
+                ks += ("lax.scan + topk.merge_topk",)
+            return ks
+        dist = {"xor": "binary.hamming_xor", "mxu": "binary.hamming_mxu",
+                "pallas": "kernels.hamming.hamming_distance_pallas"}[
+                    self.select.method]
+        sel = {"composite": "topk.composite_topk (lax.top_k)",
+               "counting": "topk.counting_topk",
+               "bisect": "topk.counting_topk_bisect"}[path]
+        return (dist, sel, "lax.scan + topk.merge_topk")
+
+    def _predicted_pruning(self) -> str:
+        if self.candidates.kind == "block_mask":
+            return ("pass 1 skips every tile outside the probed buckets; "
+                    "pass 2 composes the mask with the block-min bound")
+        if self.candidates.kind == "gather":
+            return "candidate lists bound the scan; no kernel-side pruning"
+        if self.select.path not in ("fused", "fused_scan"):
+            return "none (materializing path)"
+        if self.candidates.layout != "none":
+            return ("block-min pruning over bucket-clustered tiles "
+                    "(bites even on uniform data)")
+        return "block-min pruning only where the data layout has locality"
+
+    def geometry(self) -> dict:
+        """Block geometry + cost hints the kernels will run under — computed
+        by the SAME heuristic the kernels consult (kernels/tuning.py), so
+        the summary is exact, not advisory."""
+        from repro.kernels import tuning
+
+        backend = self.backend or jax.default_backend()
+        if self.candidates.kind == "gather":
+            cap = self.probe.nprobe or 1
+            return {"kind": "gather", "cand_width_hint": cap}
+        if self.select.path not in ("fused", "fused_scan"):
+            # mirror the executor's resolution exactly (falsy -> default)
+            eff = min(self.select.chunk or DEFAULT_CHUNK, self.n)
+            if self.select.path == "composite":
+                eff = _auto_chunk(eff, self.d)
+            return dict(kind="scan", chunk=eff,
+                        n_chunks=-(-self.n // max(eff, 1)),
+                        **tuning.cost_hints(self.q, self.n, self.w,
+                                            self.d + 1, path=self.select.path,
+                                            chunk=eff, backend=backend))
+        n_eff = self.n if self.merge.kind == "none" else (
+            self.n // max(self.n_shards, 1))
+        k_eff = self.merge.k_local if self.merge.kind == "sharded" else self.k
+        hints = tuning.cost_hints(
+            self.q, max(n_eff, 1), self.w,
+            max(self.d + 1, min(k_eff, max(n_eff, 1))),
+            path=self.select.path,
+            chunk=((self.select.chunk or DEFAULT_CHUNK)
+                   if self.select.path == "fused_scan" else 0),
+            bucket_rows=(self.mean_bucket_rows
+                         if self.candidates.kind == "block_mask" else 0),
+            backend=backend)
+        return dict(kind=self.select.path, **hints)
+
+    def explain(self) -> dict:
+        """JSON-able plan summary: stages, kernels, geometry, prediction."""
+        return {
+            "shape": {"n": self.n, "d": self.d, "w": self.w, "q": self.q,
+                      "k": self.k},
+            "stages": {
+                "probe": dataclasses.asdict(self.probe),
+                "candidates": dataclasses.asdict(self.candidates),
+                "select": dataclasses.asdict(self.select),
+                "merge": dataclasses.asdict(self.merge),
+            },
+            "kernels": list(self._kernels()),
+            "geometry": self.geometry(),
+            "predicted_pruning": self._predicted_pruning(),
+            "reason": self.reason,
+            "compact": self.compact(),
+        }
+
+    def explain_str(self) -> str:
+        e = self.explain()
+        g = ", ".join(f"{k}={v}" for k, v in e["geometry"].items())
+        lines = [
+            f"QueryPlan[{self.compact()}]",
+            f"  shape: N={self.n} d={self.d} W={self.w} Q={self.q} k={self.k}",
+            f"  kernels: {'; '.join(e['kernels'])}",
+            f"  geometry: {g}",
+            f"  pruning: {e['predicted_pruning']}",
+            f"  reason: {self.reason}",
+        ]
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# legacy-knob deprecation (forced-plan overrides)
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def _warn_legacy(api: str, knob: str, value) -> None:
+    """Once-per-process deprecation nudge: the knob still works (it is a
+    forced-plan override through the planner, bit-identical), but new code
+    should say what it means via the plan API / RetrievalConfig.force_plan."""
+    key = (api, knob, str(value))
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(
+        f"{api}({knob}={value!r}) is a legacy forced-path knob; it now "
+        f"routes through repro.core.plan as a forced-plan override "
+        f"(bit-identical). Prefer the plan API or "
+        f"RetrievalConfig.force_plan.", DeprecationWarning, stacklevel=3)
+
+
+def parse_force(spec: str) -> dict:
+    """Parse a forced-plan override string: comma-separated ``key=value``
+    pairs, e.g. ``"select=fused_scan,chunk=4096,layout=off"``. Keys:
+    select, method, chunk, layout (off|prebuilt|local_sort), k_local,
+    reorder_local (0/1), candidates (full|block_mask|gather)."""
+    out = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        key, eq, val = part.partition("=")
+        if not eq:
+            raise ValueError(f"force_plan entry {part!r} is not key=value")
+        out[key.strip()] = val.strip()
+    return out
+
+
+def _apply_force(plan: QueryPlan, force) -> QueryPlan:
+    if not force:
+        return plan
+    f = parse_force(force) if isinstance(force, str) else dict(force)
+    sel, cand, merge = plan.select, plan.candidates, plan.merge
+    reason = plan.reason
+    if "select" in f:
+        path = _SELECT_ALIASES.get(f["select"], f["select"])
+        if path == "auto" or path not in SELECT_PATHS:
+            raise ValueError(f"force_plan select={f['select']!r}")
+        if cand.kind == "block_mask":
+            # the masked candidate stage IS the fused kernels; a different
+            # select cannot run it — record the drop instead of lying
+            reason += f"; forced select={path} ignored (block_mask runs fused)"
+        else:
+            sel = dataclasses.replace(sel, path=path)
+            reason += f"; forced select={path}"
+    if "method" in f:
+        sel = dataclasses.replace(sel, method=f["method"])
+    if "chunk" in f:
+        sel = dataclasses.replace(sel, chunk=int(f["chunk"]))
+    if "layout" in f:
+        lay = {"off": "none", "on": "prebuilt"}.get(f["layout"], f["layout"])
+        if lay not in ("none", "prebuilt", "local_sort"):
+            raise ValueError(f"force_plan layout={f['layout']!r}")
+        if cand.kind == "block_mask":
+            # the masked stage streams the layout by construction; to drop
+            # it force candidates=gather instead
+            reason += "; forced layout ignored (block_mask streams it)"
+        else:
+            cand = dataclasses.replace(cand, layout=lay)
+            reason = _scrub_layout_notes(reason) + f"; forced layout={lay}"
+    if "candidates" in f:
+        ck = f["candidates"]
+        if ck not in ("full", "block_mask", "gather"):
+            raise ValueError(f"force_plan candidates={ck!r}")
+        if cand.kind == "block_mask" and ck == "gather":
+            # the one honored transition: index call sites build gather
+            # operands whenever the plan says gather (= use_layout=False)
+            cand = dataclasses.replace(cand, kind="gather", layout="none")
+            sel = dataclasses.replace(sel, path="counting")
+            reason += "; forced candidates=gather"
+        elif ck != cand.kind:
+            # any other rebinding needs operands the call site did not
+            # build (a mask needs a layout, gather needs id lists) —
+            # record the drop instead of crashing in the executor
+            reason += (f"; forced candidates={ck} ignored "
+                       f"(no operands for it on a {cand.kind} plan)")
+    if "k_local" in f:
+        if merge.kind == "sharded":
+            merge = dataclasses.replace(merge, k_local=int(f["k_local"]))
+        else:
+            # inapplicable != unknown: record the drop instead of silently
+            # letting the user believe the reduction applied
+            reason += "; forced k_local ignored (local plan has no merge)"
+    if "reorder_local" in f:
+        if merge.kind == "sharded":
+            rl = f["reorder_local"] not in ("0", "false", "off")
+            merge = dataclasses.replace(merge, reorder_local=rl)
+            cand = dataclasses.replace(cand,
+                                       layout="local_sort" if rl else "none")
+        else:
+            reason += "; forced reorder_local ignored (local plan)"
+    unknown = set(f) - {"select", "method", "chunk", "layout", "candidates",
+                        "k_local", "reorder_local"}
+    if unknown:
+        raise ValueError(f"unknown force_plan keys: {sorted(unknown)}")
+    # re-enforce the planner's invariant the overrides may have broken:
+    # only the fused select consumes a layout (materializing selects must
+    # scan the original order, or tie ids drift from the legacy paths)
+    if (cand.kind == "full" and sel.path != "fused"
+            and cand.layout != "none"):
+        cand = dataclasses.replace(cand, layout="none")
+        if merge.reorder_local:
+            merge = dataclasses.replace(merge, reorder_local=False)
+        reason = (_scrub_layout_notes(reason)
+                  + f"; layout dropped (select={sel.path} never consumes one)")
+    return dataclasses.replace(plan, select=sel, candidates=cand,
+                               merge=merge, reason=reason)
+
+
+def _scrub_layout_notes(reason: str) -> str:
+    """Remove the planner's layout notes from a reason string whose layout
+    decision an override just replaced — the plan must not self-contradict
+    ('streams the prebuilt BucketLayout; forced layout=none')."""
+    for note in ("; streams the prebuilt BucketLayout",
+                 "; per-call local_sort (no prebuilt layout)",
+                 "; per-shard local_sort before the scan"):
+        reason = reason.replace(note, "")
+    return reason
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+def resolve_select(select: Optional[str], stats: StoreStats,
+                   layout_policy: str = "auto") -> Tuple[str, str]:
+    """THE select-resolution rule — every entry point funnels through here.
+
+    ``"auto"`` becomes "fused" whenever a layout is available (prebuilt on
+    the store/engine) or demanded by config (``layout_policy="require"``):
+    only the fused kernels consume a layout, and resolving AFTER the layout
+    check was the bug that silently dropped reordering+pruning. Without a
+    layout, "auto" stays on the composite-key path (XLA's native top_k —
+    the best materializing path, and the historical default). Any concrete
+    name is a forced path, passed through untouched.
+    Returns (path, reason)."""
+    req = "auto" if select is None else select
+    if req not in _SELECT_ALIASES:
+        raise ValueError(
+            f"unknown select {select!r}; known: auto|{'|'.join(SELECT_PATHS)}")
+    req = _SELECT_ALIASES[req]
+    if req != "auto":
+        return req, f"forced select={req}"
+    if stats.has_layout:
+        return "fused", ("auto->fused: prebuilt layout present, block-min "
+                         "pruning + permutation mapping apply")
+    if layout_policy == "require":
+        return "fused", ("auto->fused: config demands a layout; only the "
+                         "fused select consumes one")
+    return "composite", ("auto->composite: no layout; XLA top_k over the "
+                         "f32 composite key is the best materializing path")
+
+
+def _resolve_layout(path: str, stats: StoreStats, layout_policy: str
+                    ) -> Tuple[str, str]:
+    """Which physical layout the full-scan candidate stage streams."""
+    if path != "fused" or layout_policy == "off":
+        return "none", ""
+    if stats.has_layout:
+        return "prebuilt", "streams the prebuilt BucketLayout"
+    if layout_policy == "require":
+        # honor the config, but not silently: this re-sorts the WHOLE
+        # datastore on every call (trace) — usually dwarfing the fused
+        # search it accelerates
+        warnings.warn(
+            "layout required but no prebuilt layout exists: re-sorting the "
+            "datastore per call; prebuild it (KNNEngine.with_layout / "
+            "build_datastore(..., layout=...)) to amortize", stacklevel=4)
+        return "local_sort", "per-call local_sort (no prebuilt layout)"
+    return "none", ""
+
+
+def plan_local(stats: StoreStats, k: int, select: Optional[str] = "auto",
+               method: str = DistanceMethod.XOR, chunk: int = DEFAULT_CHUNK,
+               layout_policy: str = "auto", force=None) -> QueryPlan:
+    """Plan a single-device full scan (the ``search_chunked`` /
+    ``KNNEngine.search`` / local ``knn_logits`` shape).
+
+    ``layout_policy``: "auto" uses a prebuilt layout when present; "require"
+    (config said ``layout != "none"``) falls back to a per-call local_sort;
+    "off" never streams a layout (the legacy ``use_layout=False``)."""
+    path, reason = resolve_select(select, stats, layout_policy)
+    lay, lay_note = _resolve_layout(path, stats, layout_policy)
+    if lay_note:
+        reason += "; " + lay_note
+    plan = QueryPlan(
+        probe=ProbeStage(), candidates=CandidateStage(kind="full", layout=lay),
+        select=SelectStage(path=path, method=method, chunk=chunk),
+        merge=MergeStage(), n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
+        mean_bucket_rows=stats.mean_bucket_rows,
+        backend=stats.backend, reason=reason)
+    return _apply_force(plan, force)
+
+
+def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
+                 k_local: Optional[int] = None, select: Optional[str] = "auto",
+                 method: str = DistanceMethod.XOR, chunk: int = DEFAULT_CHUNK,
+                 reorder_local: bool = False, layout_policy: str = "auto",
+                 force=None) -> QueryPlan:
+    """Plan a mesh-sharded search: per-shard local top-k' + hierarchical
+    merge (k_local < k trades exactness for an m/k' bandwidth reduction,
+    core/hierarchy.py). A prebuilt GLOBAL layout cannot follow the shard
+    slicing, so the only layout option is the per-shard ``local_sort`` —
+    taken when the caller asks (``reorder_local``) or config demands a
+    layout, and only for the fused path (no other select consumes it)."""
+    path, reason = resolve_select(select, stats, layout_policy)
+    k_local = k if k_local is None else k_local
+    want_rl = reorder_local or layout_policy == "require"
+    rl = want_rl and path == "fused"
+    if want_rl and not rl:
+        reason += "; reorder_local ignored (only the fused select consumes it)"
+    elif rl:
+        reason += "; per-shard local_sort before the scan"
+    if k_local < k:
+        reason += f"; statistical reduction k'={k_local} (inexact, bounded)"
+    plan = QueryPlan(
+        probe=ProbeStage(),
+        candidates=CandidateStage(kind="full",
+                                  layout="local_sort" if rl else "none"),
+        select=SelectStage(path=path, method=method, chunk=chunk),
+        merge=MergeStage(kind="sharded", k_local=k_local, axes=tuple(axes),
+                         reorder_local=rl),
+        n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
+        n_shards=max(stats.n_shards, 1), backend=stats.backend, reason=reason)
+    return _apply_force(plan, force)
+
+
+def plan_index(stats: StoreStats, k: int, kind: str, nprobe: int = 0,
+               n_tables: int = 0, use_layout: Optional[bool] = None,
+               force=None) -> QueryPlan:
+    """Plan an index-probed search (kmeans/lsh/kdtree traversal feeds the
+    candidate stage). Default: bucket-contiguous indexes drive the MASKED
+    fused kernels (probed buckets -> per-tile enable mask, no gathered
+    (Q, C, W) tensor, full buckets so recall >= gather); indexes built with
+    ``reorder=False`` — and the host-traversed kd-trees, whose leaves are
+    not layout-contiguous — fall back to the gather scan."""
+    if use_layout is None:
+        use_layout = stats.has_layout and kind != "kdtree"
+    if use_layout:
+        assert stats.has_layout, "index built with reorder=False"
+        cand = CandidateStage(kind="block_mask", layout="prebuilt")
+        sel = SelectStage(path="fused", chunk=0)
+        reason = ("masked fused kernels over the bucket-contiguous layout: "
+                  "probed buckets become the pass-1 enable mask")
+    else:
+        cand = CandidateStage(kind="gather", layout="none")
+        sel = SelectStage(path="counting", chunk=0)
+        reason = ("gather scan: candidate id lists -> xor+popcount + "
+                  "counting select"
+                  + ("" if stats.has_layout or kind == "kdtree"
+                     else " (index has no layout)"))
+    plan = QueryPlan(
+        probe=ProbeStage(kind=kind, nprobe=nprobe, n_tables=n_tables),
+        candidates=cand, select=sel, merge=MergeStage(),
+        n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
+        mean_bucket_rows=stats.mean_bucket_rows,
+        backend=stats.backend, reason=reason)
+    return _apply_force(plan, force)
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+def _distances(q_packed: jax.Array, chunk_codes: jax.Array, d: int,
+               method: str) -> jax.Array:
+    if method == DistanceMethod.XOR:
+        return binary.hamming_xor(q_packed, chunk_codes)
+    if method == DistanceMethod.MXU:
+        qb = binary.unpack_bits(q_packed, d)
+        xb = binary.unpack_bits(chunk_codes, d)
+        # bf16 hits the MXU on TPU; CPU has no native bf16 — use f32 there
+        dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+        return binary.hamming_mxu(qb, xb, d, dtype=dt)
+    if method == DistanceMethod.PALLAS:
+        from repro.kernels import ops
+        return ops.hamming_distance(q_packed, chunk_codes)
+    raise ValueError(method)
+
+
+def _auto_chunk(chunk: int, d: int) -> int:
+    """Composite-key representability guard — the composite select only.
+
+    ``topk.composite_topk`` ranks by the f32 key ``dist * chunk + idx``,
+    which is exact only while (d + 1) * chunk < 2^24 (f32 mantissa).
+    Shrinking the chunk keeps the path on XLA's fast ``top_k`` instead of
+    its bisect fallback — a performance choice, not a correctness one. The
+    other selects never build the key and are bit-identical at ANY chunk
+    size, so they scan at the caller's chunk unmodified."""
+    if (d + 1) * chunk < (1 << 24):
+        return chunk
+    return max(1024, ((1 << 24) // (d + 1)) // 1024 * 1024)
+
+
+def _scan_select(codes_packed: jax.Array, q_packed: jax.Array, k: int,
+                 plan: QueryPlan, id_offset: jax.Array | int = 0
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """The full-scan select stage (former ``engine.search_chunked`` body).
+
+    codes: (N, W) uint32, q: (Q, W); returns (dists (Q, k) ascending,
+    global ids (Q, k)). All select paths are bit-identical at any chunk."""
+    sel = plan.select
+    N, W = codes_packed.shape
+    Q = q_packed.shape[0]
+    d = plan.d
+
+    if sel.path == "fused":
+        from repro.kernels import ops
+
+        bd, bi = ops.hamming_topk(q_packed, codes_packed, k, d + 1)
+        return bd, bi + id_offset
+
+    chunk = min(sel.chunk or DEFAULT_CHUNK, N)
+    if sel.path == "composite":
+        chunk = _auto_chunk(chunk, d)
+    n_chunks = (N + chunk - 1) // chunk
+    if N % chunk:
+        pad = n_chunks * chunk - N
+        # pad with all-ones codes at max distance; ids beyond N are masked by
+        # their distance landing at the back of the merge (the fused kernels
+        # mask them exactly via n_valid instead)
+        codes_packed = jnp.pad(codes_packed, ((0, pad), (0, 0)),
+                               constant_values=jnp.uint32(0xFFFFFFFF))
+    chunks = codes_packed.reshape(n_chunks, chunk, W)
+
+    if sel.path == "fused_scan":
+        from repro.kernels import ops
+
+        def body(carry, xs):
+            best_d, best_i = carry
+            ci, codes_c = xs
+            n_valid = jnp.clip(N - ci * chunk, 0, chunk)
+            cd, cidx = ops.hamming_topk(q_packed, codes_c, min(k, chunk),
+                                        d + 1, n_valid=n_valid)
+            best_d, best_i = topk.merge_topk(best_d, best_i, cd,
+                                             cidx + ci * chunk, k)
+            return (best_d, best_i), None
+    else:
+        select_fn = {"composite": topk.composite_topk,
+                     "counting": topk.counting_topk,
+                     "bisect": topk.counting_topk_bisect}[sel.path]
+
+        def body(carry, xs):
+            best_d, best_i = carry
+            ci, codes_c = xs
+            dist = _distances(q_packed, codes_c, d, sel.method)
+            # padding rows (global id >= N) must rank strictly last — their
+            # all-ones codes can otherwise tie or beat real rows
+            gids = ci * chunk + jnp.arange(chunk)
+            dist = jnp.where(gids[None, :] < N, jnp.minimum(dist, d), d + 1)
+            cd, cidx = select_fn(dist, min(k, chunk), d + 1)
+            cids = cidx + ci * chunk
+            best_d, best_i = topk.merge_topk(best_d, best_i, cd, cids, k)
+            return (best_d, best_i), None
+
+    init = (jnp.full((Q, k), d + 1, jnp.int32), jnp.full((Q, k), N, jnp.int32))
+    (bd, bi), _ = jax.lax.scan(body, init, (jnp.arange(n_chunks), chunks))
+    return bd, bi + id_offset
+
+
+def gather_scan(codes: jax.Array, q_packed: jax.Array, cand: jax.Array,
+                k: int, d: int) -> Tuple[jax.Array, jax.Array]:
+    """Brute-force scan of per-query candidate lists (the gather stage).
+
+    codes: (N, W); cand: (Q, C) int32 with -1 padding -> (dists, ids)."""
+    safe = jnp.maximum(cand, 0)
+    cand_codes = codes[safe]                                  # (Q, C, W)
+    x = jax.lax.bitwise_xor(q_packed[:, None, :], cand_codes)
+    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    dist = jnp.where(cand < 0, d + 1, dist)
+    dd, ii = topk.counting_topk(dist, k, d + 1)
+    ids = jnp.take_along_axis(cand, jnp.minimum(ii, cand.shape[1] - 1), axis=-1)
+    ids = jnp.where(dd > d, -1, ids)
+    return dd, ids
+
+
+def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
+                     mesh: Mesh) -> Tuple[jax.Array, jax.Array]:
+    """The merge stage (former ``engine.search_sharded`` body): per-shard
+    local select, all-gather of (k' dists, ids) per shard, one sorted cut."""
+    axes = plan.merge.axes
+    k, k_local = plan.k, plan.merge.k_local
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    N = codes.shape[0]
+    n_loc = N // n_dev
+
+    def local(codes_loc, q):
+        # flat shard index over the sharding axes
+        flat = jnp.zeros((), jnp.int32)
+        for a in axes:
+            flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
+        if plan.candidates.layout == "local_sort":
+            codes_l, perm_l = layout_mod.local_sort(codes_loc, plan.d)
+            ld, li = _scan_select(codes_l, q, k_local, plan)
+            # local positions -> local ids -> global ids; local sentinels
+            # (pos == n_loc) become this shard's global sentinel, exactly
+            # like the unordered path
+            li = layout_mod.to_original_ids(perm_l, li) + flat * n_loc
+        else:
+            ld, li = _scan_select(codes_loc, q, k_local, plan,
+                                  id_offset=flat * n_loc)
+        # hierarchical merge: gather only k' candidates per shard
+        gd = jax.lax.all_gather(ld, axes, tiled=False)   # (n_dev, Q, k')
+        gi = jax.lax.all_gather(li, axes, tiled=False)
+        gd = jnp.moveaxis(gd, 0, 1).reshape(q.shape[0], n_dev * k_local)
+        gi = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], n_dev * k_local)
+        sd, order = jax.lax.sort_key_val(gd, gi, dimension=-1)
+        return sd[:, :k], order[:, :k]
+
+    mapped = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None)))
+    return mapped(codes, q_packed)
+
+
+def execute(plan: QueryPlan, q_packed: jax.Array, *,
+            codes: Optional[jax.Array] = None,
+            layout: Optional[layout_mod.BucketLayout] = None,
+            probe: Optional[jax.Array] = None,
+            cand_ids: Optional[jax.Array] = None,
+            cand: Optional[jax.Array] = None,
+            mesh: Optional[Mesh] = None,
+            id_offset: jax.Array | int = 0,
+            return_stats: bool = False):
+    """Run a plan over concrete operands.
+
+    Operand contract per stage: sharded merge needs ``codes`` + ``mesh``;
+    block_mask candidates need ``layout`` (+ ``probe`` bucket ids and/or
+    ``cand_ids`` original ids, core/layout.py semantics); gather candidates
+    need ``codes`` + ``cand`` ((Q, C) int32, -1 padded); full scans need
+    ``codes`` (plus ``layout`` when the plan streams a prebuilt one).
+    ``return_stats`` (masked plans only) appends the pruning telemetry."""
+    if plan.merge.kind == "sharded":
+        assert mesh is not None and codes is not None
+        return _execute_sharded(plan, q_packed, codes, mesh)
+    if plan.candidates.kind == "block_mask":
+        assert layout is not None
+        return layout_mod.masked_topk(layout, q_packed, plan.k, plan.d,
+                                      probe=probe, cand_ids=cand_ids,
+                                      return_stats=return_stats)
+    assert not return_stats, "stats only exist on the masked path"
+    if plan.candidates.kind == "gather":
+        assert codes is not None and cand is not None
+        return gather_scan(codes, q_packed, cand, plan.k, plan.d)
+    if plan.candidates.layout == "prebuilt":
+        assert layout is not None
+        dd, ii = _scan_select(layout.codes, q_packed, plan.k, plan)
+        return dd, layout_mod.to_original_ids(layout.perm, ii)
+    if plan.candidates.layout == "local_sort":
+        assert codes is not None
+        codes_l, perm = layout_mod.local_sort(codes, plan.d)
+        dd, ii = _scan_select(codes_l, q_packed, plan.k, plan)
+        return dd, layout_mod.to_original_ids(perm, ii)
+    assert codes is not None
+    return _scan_select(codes, q_packed, plan.k, plan, id_offset=id_offset)
+
+
+# ---------------------------------------------------------------------------
+# the generated decision table (DESIGN.md embeds this; CI checks drift)
+# ---------------------------------------------------------------------------
+
+TABLE_BEGIN = "<!-- BEGIN GENERATED PLANNER TABLE (python -m repro.core.plan --table) -->"
+TABLE_END = "<!-- END GENERATED PLANNER TABLE -->"
+
+
+def _table_scenarios():
+    """Canonical scenario cells: every planner rule appears at least once.
+    Fixed shapes + backend="cpu" so the table is machine-independent."""
+    flat = StoreStats(n=1 << 17, d=128, w=4, q=256, backend="cpu")
+    lay = dataclasses.replace(flat, has_layout=True, mean_bucket_rows=256,
+                              n_buckets=512)
+    k = 16
+    with warnings.catch_warnings():
+        # the local_sort fallback warns by design; the table just records it
+        warnings.simplefilter("ignore")
+        return _scenario_rows(flat, lay, k)
+
+
+def _scenario_rows(flat, lay, k):
+    return [
+        ("full scan / auto / no layout", plan_local(flat, k)),
+        ("full scan / auto / prebuilt layout", plan_local(lay, k)),
+        ("full scan / auto / config demands layout, none prebuilt",
+         plan_local(flat, k, layout_policy="require")),
+        ("forced counting (paper-faithful reference)",
+         plan_local(flat, k, select="counting")),
+        ("forced bisect (large (d+1)*N, scatter-free)",
+         plan_local(flat, k, select="bisect")),
+        ("forced fused / no layout",
+         plan_local(flat, k, select="fused")),
+        ("forced fused_scan (datastore exceeds one invocation)",
+         plan_local(flat, k, select="fused_scan")),
+        ("forced-plan override: layout off on a layout engine",
+         plan_local(lay, k, force="layout=off")),
+        ("IVF probe / bucket-contiguous layout",
+         plan_index(dataclasses.replace(lay, index="kmeans"), k,
+                    kind="kmeans", nprobe=2)),
+        ("IVF probe / reorder=False (gather fallback)",
+         plan_index(dataclasses.replace(flat, index="kmeans"), k,
+                    kind="kmeans", nprobe=2, use_layout=False)),
+        ("LSH probe / 4 tables / table-0-contiguous layout",
+         plan_index(dataclasses.replace(lay, index="lsh"), k, kind="lsh",
+                    n_tables=4)),
+        ("kd-tree forest (host traversal)",
+         plan_index(dataclasses.replace(flat, index="kdtree"), k,
+                    kind="kdtree")),
+        ("sharded / auto / exact (k_local=k)",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",))),
+        ("sharded / fused / statistical reduction + reorder_local",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",), k_local=4, select="fused",
+                      reorder_local=True)),
+        ("sharded / reorder_local with a non-fused select (ignored)",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",), select="counting",
+                      reorder_local=True)),
+    ]
+
+
+def decision_table() -> str:
+    """The planner's rules, rendered as a markdown table over the canonical
+    scenarios. This is what DESIGN.md embeds and CI diff-checks."""
+    def cand_cell(p):
+        c = p.candidates.kind
+        return c if p.candidates.layout == "none" else \
+            f"{c} ({p.candidates.layout})"
+
+    def sel_cell(p):
+        s = p.select.path
+        if p.candidates.kind == "gather":
+            return f"{s} over gathered candidates"
+        if s in ("composite", "counting", "bisect"):
+            s += f" / {p.select.method}, chunked"
+        elif s == "fused_scan":
+            s += ", chunked"
+        else:
+            s += ", single-shot"
+        return s
+
+    def merge_cell(p):
+        if p.merge.kind == "none":
+            return "none"
+        m = f"sharded k'={p.merge.k_local}"
+        if p.merge.reorder_local:
+            m += ", reorder_local"
+        return m
+
+    lines = [
+        "| scenario | probe | candidates | select | merge | why |",
+        "|---|---|---|---|---|---|",
+    ]
+    for label, p in _table_scenarios():
+        probe = p.probe.kind + (f" nprobe={p.probe.nprobe}"
+                                if p.probe.nprobe else "")
+        lines.append(
+            f"| {label} | {probe} | {cand_cell(p)} | {sel_cell(p)} | "
+            f"{merge_cell(p)} | {p.reason} |")
+    return "\n".join(lines)
+
+
+def extract_design_table(text: str) -> Optional[str]:
+    """The generated table committed inside DESIGN.md, or None."""
+    try:
+        start = text.index(TABLE_BEGIN) + len(TABLE_BEGIN)
+        end = text.index(TABLE_END)
+    except ValueError:
+        return None
+    return text[start:end].strip()
+
+
+def check_design(path: str) -> int:
+    """0 if DESIGN.md's embedded table matches the planner's rules."""
+    with open(path) as f:
+        committed = extract_design_table(f.read())
+    current = decision_table()
+    if committed is None:
+        print(f"{path}: no generated planner table "
+              f"(markers {TABLE_BEGIN!r} .. {TABLE_END!r})", file=sys.stderr)
+        return 1
+    if committed == current:
+        print(f"{path}: planner decision table up to date")
+        return 0
+    print(f"{path}: planner decision table DRIFTED from the planner's "
+          f"rules — regenerate with `python -m repro.core.plan --table`:",
+          file=sys.stderr)
+    sys.stderr.writelines(difflib.unified_diff(
+        committed.splitlines(keepends=True),
+        current.splitlines(keepends=True),
+        fromfile="DESIGN.md", tofile="planner"))
+    print(file=sys.stderr)
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.plan",
+        description="QueryPlan planner introspection")
+    ap.add_argument("--table", action="store_true",
+                    help="print the generated decision table (markdown)")
+    ap.add_argument("--json", action="store_true",
+                    help="print every scenario's full explain() as JSON")
+    ap.add_argument("--check-design", metavar="PATH",
+                    help="verify PATH's embedded table matches the planner")
+    args = ap.parse_args(argv)
+    if args.check_design:
+        return check_design(args.check_design)
+    if args.json:
+        print(json.dumps({label: p.explain()
+                          for label, p in _table_scenarios()}, indent=1))
+        return 0
+    print(decision_table())
+    return 0
+
+
+if __name__ == "__main__":
+    # `python -m repro.core.plan` first imports the repro.core package,
+    # whose __init__ already loaded this file as repro.core.plan — delegate
+    # to that canonical module object so exactly one copy of the IR
+    # classes and _WARNED state is ever live (CI avoids even the cosmetic
+    # runpy double-import warning by invoking main() via `python -c`)
+    from repro.core import plan as _canonical
+    raise SystemExit(_canonical.main())

@@ -9,7 +9,6 @@ softmax.
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, RetrievalConfig
-from repro.core import binary, engine, layout as layout_mod, quantize
+from repro.core import binary, layout as layout_mod, plan as plan_mod, quantize
 
 
 class DataStore(NamedTuple):
@@ -71,6 +70,61 @@ def synthetic_datastore(cfg: ModelConfig, n: Optional[int] = None, key=None) -> 
                                           r.layout_buckets))
 
 
+def plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
+                   mesh: Optional[Mesh] = None, axes: Sequence[str] = (),
+                   method: str = "xor",
+                   select: Optional[str] = None) -> plan_mod.QueryPlan:
+    """The QueryPlan ``knn_logits`` executes against this store.
+
+    Select precedence: explicit ``select`` argument > ``rcfg.plan`` (when
+    not "auto") > ``rcfg.select``; ``rcfg.force_plan`` overrides apply
+    last. ``rcfg.layout != "none"`` demands a layout (``layout_policy=
+    "require"``): the planner streams the prebuilt store layout when one
+    exists, else falls back to a per-call re-sort (with a warning —
+    prebuild via ``build_datastore(..., layout=...)`` to amortize).
+    Sharded, a prebuilt GLOBAL layout cannot follow the shard slicing, so
+    the planner only opts into per-shard re-sorting when the config asks —
+    a prebuilt store layout alone never opts the decode hot path into that
+    cost. The runtime server logs this plan per store at startup."""
+    if select is None:
+        select = rcfg.plan if rcfg.plan != "auto" else rcfg.select
+    policy = "require" if rcfg.layout != "none" else "auto"
+    n, w = store.codes.shape
+    if mesh is not None and axes:
+        n_dev = 1
+        for a in axes:
+            n_dev *= mesh.shape[a]
+        # a prebuilt GLOBAL layout cannot follow the shard slicing, so the
+        # sharded stats deliberately omit it (layout_policy still carries
+        # the config's demand, satisfied per shard via local_sort)
+        stats = plan_mod.stats_for(n, rcfg.code_bits, w, q, k=rcfg.k,
+                                   n_shards=n_dev)
+        return plan_mod.plan_sharded(
+            stats, rcfg.k, axes=tuple(axes), k_local=rcfg.local_k,
+            select=select, method=method, chunk=rcfg.chunk_size,
+            layout_policy=policy, force=rcfg.force_plan)
+    stats = plan_mod.stats_for(n, rcfg.code_bits, w, q, k=rcfg.k,
+                               layout=store.layout)
+    return plan_mod.plan_local(
+        stats, rcfg.k, select=select, method=method, chunk=rcfg.chunk_size,
+        layout_policy=policy, force=rcfg.force_plan)
+
+
+def log_store_plan(store: DataStore, rcfg: RetrievalConfig, q: int,
+                   logger, mesh: Optional[Mesh] = None,
+                   axes: Sequence[str] = ()) -> plan_mod.QueryPlan:
+    """Resolve and log the store's QueryPlan (serving-side ``explain()``).
+
+    The runtime server calls this once per store at startup; pass the
+    mesh/axes the serve step will search with so the logged plan is the
+    one decode actually runs (without them it is the store's LOCAL plan)."""
+    p = plan_for_store(store, rcfg, q, mesh=mesh, axes=axes)
+    logger.info("retrieval store: %d entries, active plan %s",
+                store.codes.shape[0], p.compact())
+    logger.debug("retrieval plan detail:\n%s", p.explain_str())
+    return p
+
+
 def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
                vocab: int, mesh: Optional[Mesh] = None,
                axes: Sequence[str] = (), method: str = "xor",
@@ -78,50 +132,23 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
                select: Optional[str] = None) -> jax.Array:
     """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab).
 
-    ``select`` overrides rcfg.select (the top-k path; "fused" streams the
-    whole datastore through one two-pass Pallas invocation without ever
-    materializing distances — ``rcfg.chunk_size`` only granulates the
-    materializing/'fused_scan' scans). A layout (``store.layout``, or
-    ``rcfg.layout != "none"`` without one) is used by the fused select
-    only (other selects scan the original order): a prebuilt store layout
-    streams its reordered codes and maps winners back; without one the
-    codes are re-sorted per call by the same static Hamming key the
-    sharded path uses (``layout.local_sort``) — prebuild via
-    ``build_datastore(..., layout=...)`` to amortize. Sharded, a prebuilt
-    GLOBAL layout cannot follow the shard slicing, so per-shard re-sorting
-    happens per call and only when rcfg.layout asks for it — a prebuilt
-    store layout alone never opts the decode hot path into that cost."""
-    select = rcfg.select if select is None else select
+    A thin plan-builder: ``plan_for_store`` resolves the select path,
+    layout usage and sharded merge from the store's stats and the config
+    (``rcfg.plan`` / ``rcfg.force_plan``; the ``select`` argument is a
+    legacy per-call forced override), and ``plan.execute`` runs the staged
+    search. "fused" streams the whole datastore through one two-pass
+    Pallas invocation without ever materializing distances —
+    ``rcfg.chunk_size`` only granulates the materializing/'fused_scan'
+    scans. Inspect the decision with ``plan_for_store(...).explain()``."""
+    p = plan_for_store(store, rcfg, hidden.shape[0], mesh=mesh, axes=axes,
+                       method=method, select=select)
     q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
-    use_layout = select == "fused" and (store.layout is not None
-                                        or rcfg.layout != "none")
-    if mesh is not None and axes:
-        dists, ids = engine.search_sharded(
-            store.codes, q_codes, rcfg.k, rcfg.code_bits, mesh, axes,
-            k_local=rcfg.local_k, chunk=rcfg.chunk_size, method=method,
-            select=select,
-            reorder_local=select == "fused" and rcfg.layout != "none")
-    elif use_layout:
-        if store.layout is not None:
-            codes, perm = store.layout.codes, store.layout.perm
-        else:
-            # honor the config, but not silently: this re-sorts the WHOLE
-            # datastore on every call (trace) — usually dwarfing the fused
-            # search it accelerates
-            warnings.warn(
-                "rcfg.layout != 'none' but the DataStore has no prebuilt "
-                "layout: re-sorting the datastore per call; build it once "
-                "with build_datastore(..., layout=rcfg.layout) to amortize",
-                stacklevel=2)
-            codes, perm = layout_mod.local_sort(store.codes, rcfg.code_bits)
-        dists, ids = engine.search_chunked(
-            codes, q_codes, rcfg.k, rcfg.code_bits,
-            chunk=rcfg.chunk_size, method=method, select=select)
-        ids = layout_mod.to_original_ids(perm, ids)
+    if p.merge.kind == "sharded":
+        dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
+                                      mesh=mesh)
     else:
-        dists, ids = engine.search_chunked(
-            store.codes, q_codes, rcfg.k, rcfg.code_bits,
-            chunk=rcfg.chunk_size, method=method, select=select)
+        dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
+                                      layout=store.layout)
     n = store.values.shape[0]
     # fewer than k valid neighbors -> the engine pads with sentinels
     # (dist = d+1, id >= N): they must not receive softmax weight or vote

@@ -54,15 +54,16 @@ def hamming_distance(q_packed: jax.Array, x_packed: jax.Array,
 
 def topk_geometry(Q: int, N: int, W: int, lanes: int,
                   bq: int | None = None, bn: int | None = None,
-                  sub: int | None = None):
+                  sub: int | None = None, backend: str | None = None):
     """The padded grid geometry ``hamming_topk`` will run under:
     (bq, bn, sub, q_pad, n_pad). ``lanes = max(bins, min(k, N))``.
 
     Exposed so layout-aware callers (core/layout.py) can build a
     (q_pad//bq, n_pad//bn) block mask that tiles EXACTLY like the kernels —
     any drift between this and the internal prologue is a shape error, not
-    a silent mis-mask."""
-    hbq, hbn, hsub = tuning.topk_blocks(Q, N, W, lanes)
+    a silent mis-mask. ``backend`` pins the heuristic to a named backend
+    (planner/table introspection); None uses the runtime default."""
+    hbq, hbn, hsub = tuning.topk_blocks(Q, N, W, lanes, backend=backend)
     bq, bn, sub = bq or hbq, bn or hbn, sub or hsub
     sub = min(sub, bn)
     return bq, bn, sub, _round_up(Q, bq), _round_up(N, bn)

@@ -109,6 +109,47 @@ def layout_blocks(Q: int, N: int, W: int, lanes: int, bucket_rows: int,
     return bq, bn, sub
 
 
+def cost_hints(Q: int, N: int, W: int, lanes: int, *, path: str = "fused",
+               chunk: int = 0, bucket_rows: int = 0,
+               backend: str | None = None) -> dict:
+    """Geometry + predicted per-call footprints for ``QueryPlan.explain()``.
+
+    Computed by the SAME heuristics the kernels consult (``topk_blocks`` /
+    ``layout_blocks`` / ``distance_blocks``), so the summary is exact for
+    the fused paths, and policy stays here rather than in the planner.
+    Byte counts are per query batch: ``codes_bytes_streamed`` is HBM->VMEM
+    code traffic (fused reads the codes once per pass per query block),
+    ``onehot_bytes`` is the widest in-kernel intermediate the VMEM budget
+    sized, ``summary_bytes`` the pass-1 block-min pruning table."""
+    backend = backend or jax.default_backend()
+    if path in ("fused", "fused_scan"):
+        n_eff = min(chunk, N) if (path == "fused_scan" and chunk) else N
+        if bucket_rows:
+            bq, bn, sub = layout_blocks(Q, n_eff, W, lanes, bucket_rows,
+                                        backend=backend)
+        else:
+            bq, bn, sub = topk_blocks(Q, n_eff, W, lanes, backend=backend)
+        q_pad, n_pad = _round_up(Q, bq), _round_up(n_eff, bn)
+        grid = (q_pad // bq, n_pad // bn)
+        hints = {
+            "bq": bq, "bn": bn, "sub": sub, "grid": list(grid),
+            "codes_bytes_streamed": 2 * 4 * W * n_pad * grid[0],
+            "onehot_bytes": 4 * bq * sub * max(lanes, 1),
+            "summary_bytes": 4 * grid[0] * grid[1],
+            "hist_bytes": 4 * Q * max(lanes, 1),
+        }
+        if path == "fused_scan":
+            hints["n_scan_steps"] = -(-N // max(n_eff, 1))
+        return hints
+    # materializing paths: the (Q, chunk) distance tile is the cost
+    c = min(chunk or N, N)
+    return {
+        "codes_bytes_streamed": 4 * W * N,
+        "distance_tile_bytes": 4 * Q * c,
+        "distance_total_bytes": 4 * Q * N,
+    }
+
+
 def distance_blocks(Q: int, N: int, W: int,
                     backend: str | None = None) -> tuple[int, int]:
     """(bq, bn) for the materializing (Q, N) distance kernel: the (bq, bn)

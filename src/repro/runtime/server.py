@@ -10,6 +10,7 @@ continuous batching.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import List, Optional
 
 import numpy as np
@@ -18,8 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import retrieval as retrieval_mod
 from repro.dist import sharding, steps as steps_mod
 from repro.models import lm
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -37,6 +41,14 @@ class Server:
         self.max_batch, self.max_len = max_batch, max_len
         self.store = store
         self.with_retrieval = cfg.retrieval.enabled and store is not None
+        # resolve and log the retrieval QueryPlan once per store at startup
+        # (retrieval.log_store_plan — the store's local plan; the serve
+        # step's mesh/axes would refine it to the sharded plan once the
+        # dist-layer wiring passes them through)
+        self.retrieval_plan = None
+        if self.with_retrieval:
+            self.retrieval_plan = retrieval_mod.log_store_plan(
+                store, cfg.retrieval, q=max_batch, logger=log)
         self.serve_fn, _, self.sspecs = steps_mod.make_serve_step(
             cfg, mesh, max_len, with_retrieval=self.with_retrieval)
         with mesh:
