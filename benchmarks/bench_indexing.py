@@ -8,7 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.util import row, time_jit
+from benchmarks.util import row, time_jit, time_sharded_merge_pair
 from repro.core import binary, engine, index
 
 
@@ -88,3 +88,28 @@ def run(report):
     _, ids = kt.search(q, q_codes, k)
     us = time_jit(lambda: kt.search(q, q_codes, k))  # includes host traversal
     report(row("fig5/kdtree", us, f"recall={recall(ids):.3f};rel={base/us:.2f}x"))
+
+    # sharded merge pair (paper's cross-chip scaling claim): the same
+    # datastore spread over the device mesh, searched exactly through the
+    # hist_merge distributed counting select vs the legacy concat/sort
+    # merge. Both are exact (recall 1.0 by construction) — the pair
+    # isolates the merge cost; merge_bytes is the planner's predicted
+    # cross-device traffic (tuning.shard_hints). Run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=4 (CI's sharded
+    # job) for a real shard count; a 1-device checkout degenerates to (1,).
+    interp = int(jax.default_backend() != "tpu")
+    wu, it = (1, 3) if interp else (2, 5)
+    nq_s = min(n_q, 16) if interp else n_q
+    qp_s = q_codes[:nq_s]
+    us_h, us_c, p_h, p_c, n_dev = time_sharded_merge_pair(
+        codes, qp_s, k, d, warmup=wu, iters=it)
+    m_h, m_c = p_h.geometry()["merge"], p_c.geometry()["merge"]
+    report(row("fig5/sharded_hist_merge", us_h,
+               f"recall=1.000;nshards={n_dev};"
+               f"merge_bytes={m_h['merge_bytes']};"
+               f"speedup_vs_concat={us_c/us_h:.2f}x;n_q={nq_s};"
+               f"interpreted={interp};plan={p_h.compact()}"))
+    report(row("fig5/sharded_concat_merge", us_c,
+               f"recall=1.000;nshards={n_dev};"
+               f"merge_bytes={m_c['merge_bytes']};n_q={nq_s};"
+               f"interpreted={interp};plan={p_c.compact()}"))

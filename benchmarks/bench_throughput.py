@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.util import row, time_jit
+from benchmarks.util import row, time_jit, time_sharded_merge_pair
 from repro.core import binary, engine, layout, plan as plan_mod
 from repro.kernels import ops
 
@@ -206,3 +206,27 @@ def run(report):
                f"plan={p_auto.compact()};forced=fused_unordered;"
                f"speedup_vs_forced={us_forced/us_auto:.2f}x;n_q={nq_u};"
                f"interpreted={int(interp)}"))
+
+    # distributed counting select vs the legacy concat/sort merge: the
+    # SHARDED pair. Both plans run the same per-shard fused kernels; only
+    # the merge differs — hist_merge psums (Q, bins) histograms and
+    # scatters winners into disjoint output slots, concat_sort gathers and
+    # sorts shards*k candidates. On a plain checkout the mesh is (1,) (the
+    # collectives degenerate but the code path is real); CI's sharded job
+    # re-runs fig4/fig5 with 4 fake host devices for the true shard count.
+    n_s, nq_s, k_s = 1 << 14, 16, 16
+    _, xb_s = _dataset(n_s, d, seed=7)
+    xp_s = binary.pack_bits(xb_s)
+    qp_s = binary.pack_bits(_dataset(nq_s, d, seed=8)[1])
+    us_h, us_c, p_h, p_c, n_dev = time_sharded_merge_pair(
+        xp_s, qp_s, k_s, d, warmup=wu, iters=it)
+    m_h, m_c = p_h.geometry()["merge"], p_c.geometry()["merge"]
+    report(row("fig4/sharded_16k/hist_merge", us_h,
+               f"qps={nq_s/us_h*1e6:.0f};nshards={n_dev};"
+               f"merge_bytes={m_h['merge_bytes']};"
+               f"speedup_vs_concat={us_c/us_h:.2f}x;n_q={nq_s};"
+               f"interpreted={int(interp)};plan={p_h.compact()}"))
+    report(row("fig4/sharded_16k/concat_merge", us_c,
+               f"qps={nq_s/us_c*1e6:.0f};nshards={n_dev};"
+               f"merge_bytes={m_c['merge_bytes']};n_q={nq_s};"
+               f"interpreted={int(interp)};plan={p_c.compact()}"))

@@ -23,3 +23,38 @@ def time_jit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def time_sharded_merge_pair(codes, queries, k: int, d: int, *,
+                            warmup: int = 1, iters: int = 3):
+    """Shared harness for the sharded hist-vs-concat merge pair (fig4 and
+    fig5 both report it): build a power-of-two mesh over the local devices
+    (a 1-device checkout degenerates to (1,); CI's sharded job runs with 4
+    fake host devices), plan the exact sharded search both ways — the
+    hist_merge distributed counting select vs the forced concat/sort merge
+    over the same fused per-shard kernels — and time both.
+
+    Returns (us_hist, us_concat, plan_hist, plan_concat, n_dev)."""
+    import numpy as np
+
+    from jax.sharding import Mesh
+    from repro.core import plan as plan_mod
+
+    devs = jax.devices()
+    n_dev = 1 << (len(devs).bit_length() - 1)      # largest power of two
+    mesh = Mesh(np.array(devs[:n_dev]).reshape(n_dev), ("data",))
+    stats = plan_mod.stats_for(codes.shape[0], d, codes.shape[1],
+                               queries.shape[0], n_shards=n_dev)
+    p_h = plan_mod.plan_sharded(stats, k, axes=("data",))
+    p_c = plan_mod.plan_sharded(stats, k, axes=("data",),
+                                select="fused", merge="concat_sort")
+    with mesh:
+        h_fn = jax.jit(lambda c, q: plan_mod.execute(p_h, q, codes=c,
+                                                     mesh=mesh))
+        us_h = time_jit(lambda: h_fn(codes, queries), warmup=warmup,
+                        iters=iters)
+        c_fn = jax.jit(lambda c, q: plan_mod.execute(p_c, q, codes=c,
+                                                     mesh=mesh))
+        us_c = time_jit(lambda: c_fn(codes, queries), warmup=warmup,
+                        iters=iters)
+    return us_h, us_c, p_h, p_c, n_dev

@@ -3,8 +3,10 @@ paper's system end-to-end at cluster shape:
 
 * datastore sharded over every mesh axis (macro-level parallelism),
 * per-shard chunked scans (partial reconfiguration),
-* hierarchical top-k' merge (statistical activation reduction) with the
-  recall/bandwidth trade swept live.
+* the exact distributed counting select (k' = k: per-shard histograms
+  psum into one global race — merge:hist_merge, O(Q*bins) traffic), and
+* the hierarchical top-k' concat merge (statistical activation reduction)
+  with the recall/bandwidth trade swept live for k' < k.
 
 Run (sets its own fake-device flag, like the dry-run):
     PYTHONPATH=src python examples/distributed_search.py
@@ -18,7 +20,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro import compat  # noqa: E402
-from repro.core import binary, engine, hierarchy  # noqa: E402
+from repro.core import binary, engine, hierarchy, plan as plan_mod  # noqa: E402
 
 
 def main():
@@ -37,20 +39,27 @@ def main():
     print(f"datastore: {n} x {d}b codes sharded over {n_dev} devices "
           f"({codes.nbytes // n_dev} B/device)")
 
-    print(f"{'k_prime':>8} {'recall@16':>10} {'merge payload':>14} "
-          f"{'reduction':>10} {'analytic fail bound':>20}")
+    print(f"{'k_prime':>8} {'recall@16':>10} {'merge bytes/q':>14} "
+          f"{'reduction':>10} {'analytic fail bound':>20}  merge")
     for k_local in (16, 8, 4, 2, 1):
+        stats = plan_mod.stats_for(n, d, codes.shape[1], q, n_shards=n_dev)
+        p = plan_mod.plan_sharded(stats, k, axes=axes, k_local=k_local)
         with mesh:
             sd, si = jax.jit(lambda c, qq, kl=k_local: engine.search_sharded(
                 c, qq, k, d, mesh, axes, k_local=kl))(sharded, q_codes)
         recall = float(jnp.mean(jnp.any(
             si[:, :, None] == exact_i[:, None, :], axis=1)))
-        payload = n_dev * k_local * 8          # (dist,id) pairs gathered
+        # the planner's predicted cross-device merge traffic: hist_merge
+        # psums O(Q*bins) counts at k'=k, the concat merge gathers
+        # O(n_dev*k') candidate pairs per query as k' shrinks
+        payload = p.geometry()["merge"]["merge_bytes"] // q
         reduction = (n // n_dev) / k_local     # the paper's m / k'
         bound = hierarchy.failure_bound(k, n_dev, k_local)
         print(f"{k_local:>8} {recall:>10.3f} {payload:>12} B "
-              f"{reduction:>9.0f}x {bound:>20.4f}")
-    print("k'=k is exact; the paper's Fig. 11 trade appears as k' shrinks.")
+              f"{reduction:>9.0f}x {bound:>20.4f}  "
+              f"{p.merge.strategy}")
+    print("k'=k is exact (the hist_merge distributed counting select); "
+          "the paper's Fig. 11 trade appears as k' shrinks.")
 
 
 if __name__ == "__main__":

@@ -15,9 +15,15 @@ Structure mirrors the paper's system:
   comes from kernels/tuning.py); ``select="fused_scan"`` keeps the chunked
   variant for datastores too large to address in one invocation;
 * the mesh-sharded datastore == macro-level parallelism across boards;
-* the distributed merge reports only each shard's local top-k'
-  (``k_local``) == statistical activation reduction (§6.3); with
-  ``k_local == k`` the result is exact.
+* the exact distributed merge is the paper's counting select writ large:
+  per-rank counters are ADDITIVE partial histograms, so shards psum their
+  (Q, bins) counts into one global race and emit winners into disjoint
+  output slots (``merge="hist_merge"``, kernels/ops.py) — no per-shard
+  top-k, no concat/sort;
+* the legacy merge reports only each shard's local top-k' (``k_local``)
+  == statistical activation reduction (§6.3); with ``k_local == k`` it is
+  exact but moves O(shards*Q*k) candidates — kept as the
+  ``merge="concat_sort"`` fallback and as THE path for k_local < k.
 
 The decision logic — how ``select="auto"`` resolves, when a layout is
 streamed, when the sharded path reorders per shard — lives in
@@ -128,23 +134,41 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
                    mesh: Mesh, axes: Sequence[str], k_local: Optional[int] = None,
                    chunk: int = plan_mod.DEFAULT_CHUNK,
                    method: str = DistanceMethod.XOR,
-                   select: str = "auto", reorder_local: bool = False):
+                   select: str = "auto", reorder_local: bool = False,
+                   merge: Optional[str] = None, shard_n_valid=None):
     """Datastore sharded over ``axes`` (cardinality sharding); queries
-    replicated. Each shard reports its local top-k' and the merge runs over
-    the gathered (devices * k') candidates. With the fused select every
-    shard runs the single-shot two-pass select over its whole local slice
-    (one hist + one emit invocation per shard, block-min pruning included).
+    replicated. A thin plan-builder: the planner decides the merge
+    strategy, the executor runs it.
+
+    The exact default (k_local == k) is the **distributed counting
+    select** (``merge="hist_merge"``): per-shard pass-1 histograms are
+    additive partial histograms of one global race, so a single ``psum``
+    of the tiny (Q, bins) counts yields ONE global per-query radius r*;
+    each shard then runs pass 2 over its own slice with slot bases from an
+    exclusive scan of per-shard below-r*/tie counts and scatters its
+    winners into disjoint slots of the global (Q, k) output via a final
+    psum. No per-shard top-k materializes and nothing is concat/sorted on
+    the host — cross-device traffic is O(Q·bins) counts instead of
+    O(shards·Q·k) candidates, which makes ``nshards`` a throughput knob
+    rather than a merge-cost tax. ``merge="concat_sort"`` forces the
+    legacy hierarchical merge (each shard reports its local top-k', one
+    gathered sort); k_local < k always takes it — that is the statistical
+    reduction of core/hierarchy.py (inexact, bounded), k_local=None means
+    k (exact).
 
     ``reorder_local=True`` (fused only — the planner drops it otherwise):
     each shard bucket-clusters its OWN slice by a static Hamming key before
     the scan (``layout.local_sort`` — trace-friendly, runs inside
     shard_map) and maps winners back to global ids, so block-min pruning
-    bites per shard even on uniform data. The sort is recomputed per call;
-    amortize by building the layout at placement time
-    (KNNEngine.with_layout) when the datastore is static.
+    bites per shard even on uniform data; it composes with either merge
+    strategy. The sort is recomputed per call; amortize by building the
+    layout at placement time (KNNEngine.with_layout) when the datastore is
+    static.
 
-    k_local < k trades exactness for an m/k' collective-bandwidth reduction
-    with the accuracy model of core/hierarchy.py; k_local=None means k (exact).
+    ``shard_n_valid``: optional (n_shards,) valid-row counts for UNEVEN
+    shards padded to a common slice size (fused select only). Results are
+    bit-identical to a single-device search over the concatenation of the
+    valid rows, including when k exceeds one shard's valid rows.
     """
     if select != "auto":
         plan_mod._warn_legacy("search_sharded", "select", select)
@@ -155,8 +179,10 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
     stats = plan_mod.stats_of(codes_packed, q_packed, d, n_shards=n_dev)
     p = plan_mod.plan_sharded(stats, k, axes=axes, k_local=k_local,
                               select=select, method=method, chunk=chunk,
-                              reorder_local=reorder_local)
-    return plan_mod.execute(p, q_packed, codes=codes_packed, mesh=mesh)
+                              reorder_local=reorder_local, merge=merge,
+                              uneven=shard_n_valid is not None)
+    return plan_mod.execute(p, q_packed, codes=codes_packed, mesh=mesh,
+                            shard_n_valid=shard_n_valid)
 
 
 def shard_datastore(codes_packed: jax.Array, mesh: Mesh, axes: Sequence[str]):

@@ -70,15 +70,23 @@ class BucketLayout(NamedTuple):
         return max(1, self.n // max(self.n_buckets, 1))
 
 
+def invert_permutation(perm: jax.Array) -> jax.Array:
+    """O(N) scatter inverse — ``inv[perm[pos]] = pos`` — instead of a
+    second O(N log N) ``argsort``. One definition for every permutation in
+    this module (prebuilt layouts AND the per-shard reorder on the
+    distributed path), so inverse semantics cannot drift."""
+    n = perm.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
 def reorder_by_assignment(codes: jax.Array, assign: jax.Array,
                           n_buckets: int) -> BucketLayout:
     """Physically cluster ``codes`` by bucket id. assign: (N,) int32 in
     [0, n_buckets). Stable: within a bucket, original id order survives."""
     assign = jnp.asarray(assign, jnp.int32)
-    n = codes.shape[0]
     perm = jnp.argsort(assign, stable=True).astype(jnp.int32)
-    inv = jnp.zeros((n,), jnp.int32).at[perm].set(
-        jnp.arange(n, dtype=jnp.int32))
+    inv = invert_permutation(perm)
     counts = jnp.bincount(assign, length=n_buckets)
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                               jnp.cumsum(counts).astype(jnp.int32)])
@@ -136,18 +144,27 @@ def build_layout(codes: jax.Array, d: int, n_buckets: int | None = None,
     return reorder_by_assignment(codes, assign, n_buckets)
 
 
-def local_sort(codes: jax.Array, d: int, bits: int | None = None):
+def local_sort(codes: jax.Array, d: int, bits: int | None = None,
+               n_valid: jax.Array | None = None):
     """Trace-friendly reorder for sharded shards: key by ``bits`` evenly
     spaced code bits (static positions — no data-dependent selection, so it
     runs under jit/shard_map) and stable-sort. Returns (codes_sorted, perm)
     with perm[pos] = local id. No bucket table: shards use the reorder for
-    full-scan block-min pruning only, not for masked probing."""
+    full-scan block-min pruning only, not for masked probing.
+
+    ``n_valid``: rows at local id >= n_valid are padding (uneven shards on
+    the distributed path) — their sort key is forced past every real key,
+    so they stay pinned at positions [n_valid, n) and the kernels' mask-by-
+    position contract (``gid < n_valid``) keeps holding after the sort."""
     n = codes.shape[0]
     bits = bits if bits is not None else default_bits(n)
     bits = max(1, min(bits, d))
     positions = jnp.arange(bits, dtype=jnp.int32) * (d // bits)
     b = binary.unpack_bits(codes, d)[:, positions].astype(jnp.int32)
     key = jnp.sum(b * (1 << jnp.arange(bits, dtype=jnp.int32)), axis=-1)
+    if n_valid is not None:
+        key = jnp.where(jnp.arange(n) < jnp.asarray(n_valid, jnp.int32),
+                        key, jnp.int32(1) << 30)
     perm = jnp.argsort(key, stable=True).astype(jnp.int32)
     return codes[perm], perm
 
@@ -207,8 +224,20 @@ def position_block_mask(layout: BucketLayout, cand: jax.Array, bq: int,
     cand: (Q, C) int32 ORIGINAL ids, -1 padded. Each candidate enables the
     data block holding its reordered position — an id-level gather plus a
     scatter into the tiny mask, not the retired (Q, C, W) code gather."""
+    return position_block_mask_from_inv(layout.inv, cand, bq, bn,
+                                        n_qblocks, n_nblocks)
+
+
+def position_block_mask_from_inv(inv: jax.Array, cand: jax.Array, bq: int,
+                                 bn: int, n_qblocks: int, n_nblocks: int
+                                 ) -> jax.Array:
+    """The id->position mask body, keyed by a bare inverse permutation —
+    the per-shard hook on the distributed path: a shard that reordered its
+    slice with ``local_sort`` has only (codes, perm), so the caller builds
+    ``invert_permutation(perm)`` (the O(N) scatter inverse) and maps local
+    candidate ids to sorted positions without a BucketLayout."""
     q = cand.shape[0]
-    pos = layout.inv[jnp.maximum(cand, 0)]                 # (Q, C)
+    pos = inv[jnp.maximum(cand, 0)]                        # (Q, C)
     blk = jnp.where(cand >= 0, pos // bn, n_nblocks)       # pad -> dropped
     qmask = jnp.zeros((q, n_nblocks), jnp.int32).at[
         jnp.arange(q)[:, None], blk].max(1, mode="drop")

@@ -116,12 +116,23 @@ class SelectStage:
 
 @dataclasses.dataclass(frozen=True)
 class MergeStage:
-    """Distributed hierarchical top-k' merge (statistical reduction)."""
+    """The sharded merge stage.
+
+    ``strategy`` (sharded plans): "hist_merge" is the distributed counting
+    select — per-shard pass-1 histograms ``psum`` into ONE global race,
+    each shard emits into disjoint slots of the global (Q, k) output
+    (exact, O(Q·bins) cross-device traffic, fused select only);
+    "concat_sort" is the legacy hierarchical merge — every shard reports
+    its local top-k', the gathered (n_shards·k') candidates are sorted and
+    cut (O(n_shards·Q·k') traffic; k_local < k makes it the statistical
+    reduction of core/hierarchy.py).
+    """
 
     kind: str = "none"          # none | sharded
     k_local: int = 0            # per-shard k' (k_local == k is exact)
     axes: Tuple[str, ...] = ()
     reorder_local: bool = False  # per-shard local_sort before the scan
+    strategy: str = ""          # sharded: hist_merge | concat_sort
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,7 +206,9 @@ class QueryPlan:
         s = self.select.path
         m = self.merge.kind
         if self.merge.kind == "sharded":
-            m += f"@k{self.merge.k_local}"
+            m = self.merge.strategy or "sharded"
+            if m != "hist_merge":
+                m += f"@k{self.merge.k_local}"
         return f"probe:{p}|cand:{c}|select:{s}|merge:{m}"
 
     def _kernels(self) -> Tuple[str, ...]:
@@ -207,14 +220,20 @@ class QueryPlan:
                   "kernels.topk_select.hamming_emit_pallas")
             if path == "fused_scan":
                 ks += ("lax.scan + topk.merge_topk",)
-            return ks
-        dist = {"xor": "binary.hamming_xor", "mxu": "binary.hamming_mxu",
-                "pallas": "kernels.hamming.hamming_distance_pallas"}[
-                    self.select.method]
-        sel = {"composite": "topk.composite_topk (lax.top_k)",
-               "counting": "topk.counting_topk",
-               "bisect": "topk.counting_topk_bisect"}[path]
-        return (dist, sel, "lax.scan + topk.merge_topk")
+        else:
+            dist = {"xor": "binary.hamming_xor", "mxu": "binary.hamming_mxu",
+                    "pallas": "kernels.hamming.hamming_distance_pallas"}[
+                        self.select.method]
+            sel = {"composite": "topk.composite_topk (lax.top_k)",
+                   "counting": "topk.counting_topk",
+                   "bisect": "topk.counting_topk_bisect"}[path]
+            ks = (dist, sel, "lax.scan + topk.merge_topk")
+        if self.merge.kind == "sharded":
+            ks += (("ops.hamming_topk_sharded (hist psum + disjoint-slot "
+                    "output psum)",)
+                   if self.merge.strategy == "hist_merge"
+                   else ("all_gather k'-per-shard + sort_key_val cut",))
+        return ks
 
     def _predicted_pruning(self) -> str:
         if self.candidates.kind == "block_mask":
@@ -232,10 +251,23 @@ class QueryPlan:
     def geometry(self) -> dict:
         """Block geometry + cost hints the kernels will run under — computed
         by the SAME heuristic the kernels consult (kernels/tuning.py), so
-        the summary is exact, not advisory."""
+        the summary is exact, not advisory. Sharded plans additionally
+        carry a ``merge`` sub-dict (``tuning.shard_hints``): shard geometry
+        and the predicted cross-device merge traffic of BOTH strategies."""
         from repro.kernels import tuning
 
         backend = self.backend or jax.default_backend()
+        g = self._geometry_base(backend)
+        if self.merge.kind == "sharded":
+            g["merge"] = tuning.shard_hints(
+                self.q, self.k, self.d + 1, max(self.n_shards, 1),
+                k_local=self.merge.k_local,
+                strategy=self.merge.strategy or "concat_sort")
+        return g
+
+    def _geometry_base(self, backend: str) -> dict:
+        from repro.kernels import tuning
+
         if self.candidates.kind == "gather":
             cap = self.probe.nprobe or 1
             return {"kind": "gather", "cand_width_hint": cap}
@@ -251,7 +283,9 @@ class QueryPlan:
                                             chunk=eff, backend=backend))
         n_eff = self.n if self.merge.kind == "none" else (
             self.n // max(self.n_shards, 1))
-        k_eff = self.merge.k_local if self.merge.kind == "sharded" else self.k
+        k_eff = (self.merge.k_local
+                 if (self.merge.kind == "sharded"
+                     and self.merge.strategy != "hist_merge") else self.k)
         hints = tuning.cost_hints(
             self.q, max(n_eff, 1), self.w,
             max(self.d + 1, min(k_eff, max(n_eff, 1))),
@@ -283,12 +317,22 @@ class QueryPlan:
 
     def explain_str(self) -> str:
         e = self.explain()
-        g = ", ".join(f"{k}={v}" for k, v in e["geometry"].items())
+        geo = dict(e["geometry"])
+        merge = geo.pop("merge", None)
+        g = ", ".join(f"{k}={v}" for k, v in geo.items())
         lines = [
             f"QueryPlan[{self.compact()}]",
             f"  shape: N={self.n} d={self.d} W={self.w} Q={self.q} k={self.k}",
             f"  kernels: {'; '.join(e['kernels'])}",
             f"  geometry: {g}",
+        ]
+        if merge is not None:
+            lines.append(
+                f"  merge: {merge['strategy']} over {merge['n_shards']} "
+                f"shards, predicted traffic {merge['merge_bytes']} B "
+                f"(hist_merge {merge['hist_merge_bytes']} B vs concat_sort "
+                f"{merge['concat_sort_bytes']} B)")
+        lines += [
             f"  pruning: {e['predicted_pruning']}",
             f"  reason: {self.reason}",
         ]
@@ -321,7 +365,8 @@ def parse_force(spec: str) -> dict:
     """Parse a forced-plan override string: comma-separated ``key=value``
     pairs, e.g. ``"select=fused_scan,chunk=4096,layout=off"``. Keys:
     select, method, chunk, layout (off|prebuilt|local_sort), k_local,
-    reorder_local (0/1), candidates (full|block_mask|gather)."""
+    reorder_local (0/1), candidates (full|block_mask|gather),
+    merge (hist_merge|concat_sort — sharded plans only)."""
     out = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
         key, eq, val = part.partition("=")
@@ -382,6 +427,12 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
     if "k_local" in f:
         if merge.kind == "sharded":
             merge = dataclasses.replace(merge, k_local=int(f["k_local"]))
+            if merge.k_local < plan.k and merge.strategy == "hist_merge":
+                # hist_merge is exact by construction; k' < k asked for the
+                # statistical reduction, which only the concat merge runs
+                merge = dataclasses.replace(merge, strategy="concat_sort")
+                reason += ("; hist_merge demoted to concat_sort "
+                           "(k_local < k is the statistical reduction)")
         else:
             # inapplicable != unknown: record the drop instead of silently
             # letting the user believe the reduction applied
@@ -394,11 +445,32 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
                                        layout="local_sort" if rl else "none")
         else:
             reason += "; forced reorder_local ignored (local plan)"
+    if "merge" in f:
+        mv = f["merge"]
+        if mv not in ("hist_merge", "concat_sort"):
+            raise ValueError(f"force_plan merge={mv!r}")
+        if merge.kind != "sharded":
+            reason += "; forced merge ignored (local plan has no merge)"
+        elif mv == "hist_merge" and sel.path != "fused":
+            reason += ("; forced merge=hist_merge ignored "
+                       "(needs the fused select)")
+        elif mv == "hist_merge" and merge.k_local < plan.k:
+            reason += ("; forced merge=hist_merge ignored "
+                       "(k_local < k is the statistical concat merge)")
+        elif mv != merge.strategy:
+            merge = dataclasses.replace(merge, strategy=mv)
+            reason += f"; forced merge={mv}"
     unknown = set(f) - {"select", "method", "chunk", "layout", "candidates",
-                        "k_local", "reorder_local"}
+                        "k_local", "reorder_local", "merge"}
     if unknown:
         raise ValueError(f"unknown force_plan keys: {sorted(unknown)}")
-    # re-enforce the planner's invariant the overrides may have broken:
+    # re-enforce the planner's invariants the overrides may have broken:
+    # hist_merge runs the two-pass kernels — a forced non-fused select
+    # demotes the sharded merge back to the concat/sort fallback
+    if merge.strategy == "hist_merge" and sel.path != "fused":
+        merge = dataclasses.replace(merge, strategy="concat_sort")
+        reason += ("; hist_merge demoted to concat_sort "
+                   f"(select={sel.path} cannot race histograms)")
     # only the fused select consumes a layout (materializing selects must
     # scan the original order, or tie ids drift from the legacy paths)
     if (cand.kind == "full" and sel.path != "fused"
@@ -501,15 +573,44 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
                  k_local: Optional[int] = None, select: Optional[str] = "auto",
                  method: str = DistanceMethod.XOR, chunk: int = DEFAULT_CHUNK,
                  reorder_local: bool = False, layout_policy: str = "auto",
+                 merge: Optional[str] = None, uneven: bool = False,
                  force=None) -> QueryPlan:
-    """Plan a mesh-sharded search: per-shard local top-k' + hierarchical
-    merge (k_local < k trades exactness for an m/k' bandwidth reduction,
-    core/hierarchy.py). A prebuilt GLOBAL layout cannot follow the shard
-    slicing, so the only layout option is the per-shard ``local_sort`` —
-    taken when the caller asks (``reorder_local``) or config demands a
-    layout, and only for the fused path (no other select consumes it)."""
-    path, reason = resolve_select(select, stats, layout_policy)
+    """Plan a mesh-sharded search.
+
+    Merge strategy: the default for an exact sharded search (k_local == k)
+    is the **distributed counting select** (``hist_merge``): per-shard
+    pass-1 histograms ``psum`` into one global per-query r*, each shard
+    emits into disjoint slots of the global output — no per-shard top-k
+    materialization, no concat/sort, O(Q·bins) cross-device counts instead
+    of O(n_shards·Q·k) candidates. Because it races histograms it needs
+    the fused select, so sharded ``"auto"`` now resolves to "fused";
+    ``merge="concat_sort"`` forces the legacy hierarchical merge, and
+    k_local < k (the statistical reduction of core/hierarchy.py, inexact
+    by design) always takes it. A prebuilt GLOBAL layout cannot follow the
+    shard slicing, so the only layout option is the per-shard
+    ``local_sort`` — taken when the caller asks (``reorder_local``) or
+    config demands a layout, and only for the fused path (no other select
+    consumes it); it composes with either merge strategy.
+
+    ``uneven=True`` declares that the executor will receive per-shard
+    ``shard_n_valid`` counts (shards padded to a common slice): only the
+    two-pass kernels mask that padding exactly, so "auto" resolves to
+    "fused" whatever the merge strategy."""
     k_local = k if k_local is None else k_local
+    req = "auto" if select is None else select
+    if (_SELECT_ALIASES.get(req) == "auto"
+            and (uneven or (k_local >= k and merge != "concat_sort"))):
+        # sharded auto lands on the fused kernels: the hist_merge "merge"
+        # IS a histogram psum only they produce, and per-shard n_valid
+        # padding is only masked exactly inside them
+        path = "fused"
+        reason = ("auto->fused: sharded store, the hist_merge distributed "
+                  "counting select races per-shard histograms through one "
+                  "psum") if (k_local >= k and merge != "concat_sort") else (
+            "auto->fused: per-shard n_valid (uneven shards) is masked "
+            "exactly only inside the two-pass kernels")
+    else:
+        path, reason = resolve_select(select, stats, layout_policy)
     want_rl = reorder_local or layout_policy == "require"
     rl = want_rl and path == "fused"
     if want_rl and not rl:
@@ -518,13 +619,26 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
         reason += "; per-shard local_sort before the scan"
     if k_local < k:
         reason += f"; statistical reduction k'={k_local} (inexact, bounded)"
+    strategy = "hist_merge" if (path == "fused" and k_local >= k) else \
+        "concat_sort"
+    if merge is not None:
+        if merge not in ("hist_merge", "concat_sort"):
+            raise ValueError(f"unknown merge strategy {merge!r}; "
+                             f"known: hist_merge|concat_sort")
+        if merge == "hist_merge" and strategy != "hist_merge":
+            reason += ("; merge=hist_merge ignored ("
+                       + ("k_local < k is the statistical concat merge"
+                          if k_local < k else "needs the fused select") + ")")
+        elif merge != strategy:
+            strategy = merge
+            reason += f"; forced merge={merge}"
     plan = QueryPlan(
         probe=ProbeStage(),
         candidates=CandidateStage(kind="full",
                                   layout="local_sort" if rl else "none"),
         select=SelectStage(path=path, method=method, chunk=chunk),
         merge=MergeStage(kind="sharded", k_local=k_local, axes=tuple(axes),
-                         reorder_local=rl),
+                         reorder_local=rl, strategy=strategy),
         n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
         n_shards=max(stats.n_shards, 1), backend=stats.backend, reason=reason)
     return _apply_force(plan, force)
@@ -680,9 +794,22 @@ def gather_scan(codes: jax.Array, q_packed: jax.Array, cand: jax.Array,
 
 
 def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
-                     mesh: Mesh) -> Tuple[jax.Array, jax.Array]:
-    """The merge stage (former ``engine.search_sharded`` body): per-shard
-    local select, all-gather of (k' dists, ids) per shard, one sorted cut."""
+                     mesh: Mesh, shard_n_valid=None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """The sharded merge stage.
+
+    ``strategy == "hist_merge"``: the distributed counting select
+    (``ops.hamming_topk_sharded``) — per-shard pass-1 histograms psum into
+    one global r*, each shard's pass 2 scatters into disjoint slots of the
+    global (Q, k) output. Exact; composes with the per-shard local_sort
+    layout.  Otherwise the legacy hierarchical merge (the former
+    ``engine.search_sharded`` body): per-shard local top-k', all-gather of
+    (k' dists, ids) per shard, one sorted cut.
+
+    ``shard_n_valid``: optional (n_shards,) per-shard valid-row counts for
+    uneven shards padded to a common slice size (fused select only; ids
+    are reported in the UNPADDED global space — bit-identical to a
+    single-device search over the concatenation of the valid rows)."""
     axes = plan.merge.axes
     k, k_local = plan.k, plan.merge.k_local
     n_dev = 1
@@ -690,21 +817,60 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
         n_dev *= mesh.shape[a]
     N = codes.shape[0]
     n_loc = N // n_dev
+    hist_merge = plan.merge.strategy == "hist_merge"
+    nv_all = None
+    if shard_n_valid is not None:
+        nv_all = jnp.asarray(shard_n_valid, jnp.int32)
+        assert nv_all.shape == (n_dev,), (nv_all.shape, n_dev)
+        if plan.select.path != "fused":
+            # only the two-pass kernels mask per-shard padding exactly
+            # (by global row id, in-kernel); refuse up front rather than
+            # silently running a select the plan did not promise
+            raise ValueError(
+                f"shard_n_valid (uneven shards) needs the fused select; "
+                f"this plan resolved select={plan.select.path!r} — leave "
+                f"select='auto' (plan_sharded resolves it to 'fused' when "
+                f"shard_n_valid is coming) or force select='fused'")
 
     def local(codes_loc, q):
+        from repro.kernels import ops
+
         # flat shard index over the sharding axes
         flat = jnp.zeros((), jnp.int32)
         for a in axes:
             flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
+        nv = ib = nt = None
+        if nv_all is not None:
+            csum = jnp.cumsum(nv_all)
+            nv = nv_all[flat]
+            ib, nt = csum[flat] - nv, csum[-1]
+        perm_l = None
+        codes_l = codes_loc
         if plan.candidates.layout == "local_sort":
-            codes_l, perm_l = layout_mod.local_sort(codes_loc, plan.d)
+            codes_l, perm_l = layout_mod.local_sort(codes_loc, plan.d,
+                                                    n_valid=nv)
+        if hist_merge:
+            return ops.hamming_topk_sharded(
+                q, codes_l, k, plan.d + 1, axes, n_shards=n_dev,
+                n_valid=nv, id_base=ib, n_total=nt, perm=perm_l)
+        if nv is not None:
+            # uneven shards on the legacy merge: mask padding in-kernel,
+            # report ids in the unpadded global space, sentinels at the
+            # global total so the sorted cut ranks them last everywhere
+            ld, li = ops.hamming_topk(q, codes_l, k_local, plan.d + 1,
+                                      n_valid=nv)
+            if perm_l is not None:
+                li = jnp.where(li < nv,
+                               perm_l[jnp.minimum(li, n_loc - 1)], li)
+            li = jnp.where(li < nv, li + ib, nt)
+        elif perm_l is not None:
             ld, li = _scan_select(codes_l, q, k_local, plan)
             # local positions -> local ids -> global ids; local sentinels
             # (pos == n_loc) become this shard's global sentinel, exactly
             # like the unordered path
             li = layout_mod.to_original_ids(perm_l, li) + flat * n_loc
         else:
-            ld, li = _scan_select(codes_loc, q, k_local, plan,
+            ld, li = _scan_select(codes_l, q, k_local, plan,
                                   id_offset=flat * n_loc)
         # hierarchical merge: gather only k' candidates per shard
         gd = jax.lax.all_gather(ld, axes, tiled=False)   # (n_dev, Q, k')
@@ -712,6 +878,19 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
         gd = jnp.moveaxis(gd, 0, 1).reshape(q.shape[0], n_dev * k_local)
         gi = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], n_dev * k_local)
         sd, order = jax.lax.sort_key_val(gd, gi, dimension=-1)
+        if n_dev * k_local < k:
+            # fewer gathered candidates than requested: pad to the (Q, k)
+            # contract with (d+1, sentinel) instead of silently returning
+            # a narrower array; the id sentinel follows the result's id
+            # space — the unpadded valid total on uneven shards, N else
+            pad = k - n_dev * k_local
+            sent = nt if nt is not None else jnp.int32(N)
+            sd = jnp.concatenate(
+                [sd, jnp.full((q.shape[0], pad), plan.d + 1, jnp.int32)],
+                axis=1)
+            order = jnp.concatenate(
+                [order, jnp.broadcast_to(sent, (q.shape[0], pad))
+                 .astype(jnp.int32)], axis=1)
         return sd[:, :k], order[:, :k]
 
     mapped = shard_map(
@@ -729,18 +908,22 @@ def execute(plan: QueryPlan, q_packed: jax.Array, *,
             cand: Optional[jax.Array] = None,
             mesh: Optional[Mesh] = None,
             id_offset: jax.Array | int = 0,
+            shard_n_valid=None,
             return_stats: bool = False):
     """Run a plan over concrete operands.
 
-    Operand contract per stage: sharded merge needs ``codes`` + ``mesh``;
-    block_mask candidates need ``layout`` (+ ``probe`` bucket ids and/or
-    ``cand_ids`` original ids, core/layout.py semantics); gather candidates
-    need ``codes`` + ``cand`` ((Q, C) int32, -1 padded); full scans need
-    ``codes`` (plus ``layout`` when the plan streams a prebuilt one).
-    ``return_stats`` (masked plans only) appends the pruning telemetry."""
+    Operand contract per stage: sharded merge needs ``codes`` + ``mesh``
+    (+ optional ``shard_n_valid`` (n_shards,) valid-row counts for uneven
+    shards padded to a common slice); block_mask candidates need
+    ``layout`` (+ ``probe`` bucket ids and/or ``cand_ids`` original ids,
+    core/layout.py semantics); gather candidates need ``codes`` + ``cand``
+    ((Q, C) int32, -1 padded); full scans need ``codes`` (plus ``layout``
+    when the plan streams a prebuilt one). ``return_stats`` (masked plans
+    only) appends the pruning telemetry."""
     if plan.merge.kind == "sharded":
         assert mesh is not None and codes is not None
-        return _execute_sharded(plan, q_packed, codes, mesh)
+        return _execute_sharded(plan, q_packed, codes, mesh,
+                                shard_n_valid=shard_n_valid)
     if plan.candidates.kind == "block_mask":
         assert layout is not None
         return layout_mod.masked_topk(layout, q_packed, plan.k, plan.d,
@@ -812,9 +995,15 @@ def _scenario_rows(flat, lay, k):
         ("kd-tree forest (host traversal)",
          plan_index(dataclasses.replace(flat, index="kdtree"), k,
                     kind="kdtree")),
-        ("sharded / auto / exact (k_local=k)",
+        ("sharded / auto / exact (k_local=k): distributed counting select",
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",))),
+        ("sharded / forced concat_sort merge (legacy fallback)",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",), merge="concat_sort")),
+        ("sharded / exact + reorder_local (hist_merge over sorted shards)",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",), reorder_local=True)),
         ("sharded / fused / statistical reduction + reorder_local",
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",), k_local=4, select="fused",
@@ -849,7 +1038,10 @@ def decision_table() -> str:
     def merge_cell(p):
         if p.merge.kind == "none":
             return "none"
-        m = f"sharded k'={p.merge.k_local}"
+        if p.merge.strategy == "hist_merge":
+            m = "hist_merge (exact, psum of histograms)"
+        else:
+            m = f"concat_sort k'={p.merge.k_local}"
         if p.merge.reorder_local:
             m += ", reorder_local"
         return m

@@ -85,7 +85,12 @@ def plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
     Sharded, a prebuilt GLOBAL layout cannot follow the shard slicing, so
     the planner only opts into per-shard re-sorting when the config asks —
     a prebuilt store layout alone never opts the decode hot path into that
-    cost. The runtime server logs this plan per store at startup."""
+    cost. Exact sharded serving (``rcfg.local_k >= rcfg.k``) rides the
+    hist_merge distributed counting select — O(Q·bins) cross-device counts
+    instead of O(shards·Q·k) gathered candidates; ``local_k < k`` keeps
+    the statistical concat/sort reduction. The runtime server logs this
+    plan (merge strategy and predicted traffic included) per store at
+    startup."""
     if select is None:
         select = rcfg.plan if rcfg.plan != "auto" else rcfg.select
     policy = "require" if rcfg.layout != "none" else "auto"
@@ -117,10 +122,19 @@ def log_store_plan(store: DataStore, rcfg: RetrievalConfig, q: int,
 
     The runtime server calls this once per store at startup; pass the
     mesh/axes the serve step will search with so the logged plan is the
-    one decode actually runs (without them it is the store's LOCAL plan)."""
+    one decode actually runs (without them it is the store's LOCAL plan).
+    Sharded plans additionally log the merge strategy and its predicted
+    cross-device traffic (tuning.shard_hints via plan.geometry())."""
     p = plan_for_store(store, rcfg, q, mesh=mesh, axes=axes)
     logger.info("retrieval store: %d entries, active plan %s",
                 store.codes.shape[0], p.compact())
+    if p.merge.kind == "sharded":
+        m = p.geometry()["merge"]
+        logger.info(
+            "retrieval shard merge: %s over %d shards, predicted merge "
+            "traffic %d B/batch (hist_merge %d B vs concat_sort %d B)",
+            m["strategy"], m["n_shards"], m["merge_bytes"],
+            m["hist_merge_bytes"], m["concat_sort_bytes"])
     logger.debug("retrieval plan detail:\n%s", p.explain_str())
     return p
 

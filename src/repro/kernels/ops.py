@@ -10,6 +10,13 @@ shared heuristic in kernels/tuning.py unless explicitly overridden.
 ``hamming_topk`` is the engine's single-shot fused select: one hist + one
 emit ``pallas_call`` over the WHOLE datastore for any N, with the pass-1
 block-min summary pruning pass-2 tiles that cannot hold a winner.
+
+``hamming_topk_sharded`` is the same two-pass select distributed across a
+device mesh (call it INSIDE ``shard_map``): the paper's counters are
+additive partial histograms, so one ``psum`` of the tiny (Q, bins) counts
+yields ONE global per-query radius r*, and each shard then emits its
+winners into disjoint slots of the global (Q, k) output — no per-shard
+top-k materialization, no host concat/sort merge.
 """
 from __future__ import annotations
 
@@ -99,6 +106,39 @@ def hamming_hist(q_packed: jax.Array, x_packed: jax.Array, bins: int,
     return hist[:Q]
 
 
+def _radius_from_cum(cum: jax.Array, k_k: int):
+    """The counting select's "finish line": from a cumulative histogram,
+    the per-query effective k, k-th-smallest radius r*, strict-below count
+    and emit count. ONE definition — the single-device and distributed
+    selects must derive the radius identically or they diverge."""
+    k_eff = jnp.minimum(k_k, cum[:, -1])                             # (Q,)
+    r_star = jnp.argmax(cum >= k_eff[:, None], axis=-1).astype(jnp.int32)
+    gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
+    n_lt = jnp.where(r_star > 0, gather(cum, jnp.maximum(r_star - 1, 0)), 0)
+    n_emit = jnp.minimum(gather(cum, r_star), k_eff)
+    return k_eff, r_star, n_lt, n_emit
+
+
+def _finalize_slots(out_d: jax.Array, out_i: jax.Array, n_emit: jax.Array,
+                    k: int, k_k: int, bins: int, sentinel_id):
+    """Slot-ordered emit output -> the select contract: untouched slots
+    become (bins, sentinel_id), one O(k log k) sort per row orders the
+    winners (stable: ties keep slot order), columns beyond k_k pad with
+    the same sentinels. Shared by the local and distributed epilogues."""
+    Q = out_d.shape[0]
+    live = jnp.arange(k_k, dtype=jnp.int32)[None, :] < n_emit[:, None]
+    out_d = jnp.where(live, out_d, bins)
+    out_i = jnp.where(live, out_i, sentinel_id)
+    out_d, out_i = jax.lax.sort_key_val(out_d, out_i, dimension=-1)
+    if k_k < k:
+        out_d = jnp.concatenate(
+            [out_d, jnp.full((Q, k - k_k), bins, jnp.int32)], axis=1)
+        out_i = jnp.concatenate(
+            [out_i, jnp.broadcast_to(jnp.asarray(sentinel_id, jnp.int32),
+                                     (Q, k - k_k))], axis=1)
+    return out_d, out_i
+
+
 def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
                  n_valid: jax.Array | int | None = None,
                  block_mask: jax.Array | None = None,
@@ -161,11 +201,7 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
     # per-query candidate count: n_valid when unmasked, the enabled-row
     # count under a block mask — k_eff must follow it or candidates with
     # dist > 0 would be dropped whenever a query sees fewer than k rows
-    k_eff = jnp.minimum(k_k, cum[:, -1])                             # (Q,)
-    r_star = jnp.argmax(cum >= k_eff[:, None], axis=-1).astype(jnp.int32)
-    gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
-    n_lt = jnp.where(r_star > 0, gather(cum, jnp.maximum(r_star - 1, 0)), 0)
-    n_emit = jnp.minimum(gather(cum, r_star), k_eff)
+    _, r_star, n_lt, n_emit = _radius_from_cum(cum, k_k)
 
     # pass 2: the reports — padded query rows get r*=-1 so they emit nothing
     q_pad = qp.shape[0] - Q
@@ -179,13 +215,7 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
     out_d, out_i = out_d[:Q], out_i[:Q]
 
     # untouched slots -> (bins, N) sentinels, then one O(k log k) sort per row
-    live = jnp.arange(k_k, dtype=jnp.int32)[None, :] < n_emit[:, None]
-    out_d = jnp.where(live, out_d, bins)
-    out_i = jnp.where(live, out_i, N)
-    out_d, out_i = jax.lax.sort_key_val(out_d, out_i, dimension=-1)
-    if k_k < k:
-        out_d = jnp.pad(out_d, ((0, 0), (0, k - k_k)), constant_values=bins)
-        out_i = jnp.pad(out_i, ((0, 0), (0, k - k_k)), constant_values=N)
+    out_d, out_i = _finalize_slots(out_d, out_i, n_emit, k, k_k, bins, N)
     if return_stats:
         # mirror the kernels' guards: pass 1 skips mask-disabled tiles;
         # pass 2 skips a tile iff it is disabled OR its min valid distance
@@ -201,6 +231,145 @@ def hamming_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
                               "p1_blocks_skipped": jnp.sum(~enabled),
                               "block_min": block_min}
     return out_d, out_i
+
+
+def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
+                         bins: int, axis_names, *, n_shards: int,
+                         n_valid: jax.Array | None = None,
+                         id_base: jax.Array | None = None,
+                         n_total: jax.Array | int | None = None,
+                         perm: jax.Array | None = None,
+                         block_mask: jax.Array | None = None,
+                         bq: int | None = None, bn: int | None = None,
+                         sub: int | None = None):
+    """Distributed counting select — the sharded fused top-k WITHOUT a
+    concat/sort merge. Call INSIDE ``shard_map``; collectives run over
+    ``axis_names`` (``n_shards`` = product of their sizes).
+
+    q: (Q, W) replicated; x_local: (n_loc, W), this shard's slice. The
+    result (dists (Q, k), ids (Q, k)) is replicated and bit-identical to
+    ``hamming_topk`` over the concatenation of every shard's valid rows
+    (under ``perm`` the DISTANCES keep that guarantee but ties at the r*
+    cut are picked in layout-position order — the same report-order
+    freedom every layout-streaming path has, core/layout.py):
+
+    1. each shard runs pass 1 over its slice — its (Q, bins) histogram is
+       a PARTIAL histogram of the global race (counters are additive);
+    2. one ``psum`` merges them; the global r*, below-count n_lt and
+       emit count derive exactly as in the single-device select;
+    3. each shard derives its own below-r*/tie counts from its LOCAL
+       histogram; one tiny (Q, 2)-per-shard all-gather turns them into
+       exclusive-scan slot bases, so every shard owns a disjoint slice of
+       the global (Q, k) slot space (without ``perm``, ids stay in global
+       index order — shard slices are contiguous id ranges — so tie
+       semantics match the single-device kernel bit-for-bit, including
+       the first-(k - n_lt) global tie cut; with ``perm``, in-shard tie
+       order follows layout positions instead);
+    4. each shard runs pass 2 locally (block-min pruning and the enable
+       mask compose as usual) with ``slot_base``/``id_base`` from step 3,
+       and a final ``psum`` assembles the disjoint slots.
+
+    Cross-device traffic is O(Q·bins) histogram counts + O(Q·n_shards)
+    base counts + the O(Q·k) output — never O(n_shards·Q·k) candidates.
+
+    ``n_valid``: this shard's valid-row count (rows beyond it are padding;
+    uneven shards pad to a common n_loc). ``id_base``/``n_total``: this
+    shard's exclusive prefix of valid rows and the global valid total —
+    derived via a scalar all-gather when None (even shards need neither:
+    they default to shard_index * n_loc and n_shards * n_loc). ``perm``:
+    (n_loc,) local layout permutation (``layout.local_sort``) — winners
+    are emitted as layout positions and mapped back to local ids on this
+    shard's owned slots before the output psum. ``block_mask``: this
+    shard's (Q_pad/bq, n_loc_pad/bn) enable mask (core/layout.py
+    semantics; r* then derives from the globally-merged MASKED histogram).
+    """
+    axes = tuple(axis_names)
+    Q, W = q_packed.shape
+    n_loc = x_local.shape[0]
+    k_k = min(k, n_shards * n_loc)
+    if k_k == 0:
+        return (jnp.full((Q, k), bins, jnp.int32),
+                jnp.full((Q, k), 0, jnp.int32))
+
+    # flat shard index over the collective axes (row-major, like the mesh)
+    flat = jnp.zeros((), jnp.int32)
+    for a in axes:
+        flat = flat * jax.lax.psum(jnp.int32(1), a) + jax.lax.axis_index(a)
+
+    if n_valid is None:
+        nv = jnp.int32(n_loc)
+        ib = (flat * n_loc).astype(jnp.int32) if id_base is None else id_base
+        nt = n_shards * n_loc if n_total is None else n_total
+    else:
+        nv = jnp.asarray(n_valid, jnp.int32).reshape(())
+        ib, nt = id_base, n_total
+        if ib is None or nt is None:
+            nv_all = jax.lax.all_gather(nv, axes, tiled=False)
+            nv_all = nv_all.reshape(n_shards)
+            csum = jnp.cumsum(nv_all)
+            ib = csum[flat] - nv_all[flat] if ib is None else ib
+            nt = csum[-1] if nt is None else nt
+    ib = jnp.asarray(ib, jnp.int32)
+    nt = jnp.asarray(nt, jnp.int32)
+
+    qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_local,
+                                        max(bins, k_k), bq, bn, sub)
+    interp = _interpret()
+
+    # pass 1 locally, then merge the partial histograms: ONE global race
+    hist, block_min = hamming_hist_pallas(qp, xp, bins, nv,
+                                          block_mask=block_mask,
+                                          bq=bq, bn=bn, sub=sub,
+                                          interpret=interp)
+    hist_loc = hist[:Q]
+    hist_glob = jax.lax.psum(hist_loc, axes)
+    cum_g = jnp.cumsum(hist_glob, axis=-1)
+    gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
+    _, r_star, n_lt, n_emit = _radius_from_cum(cum_g, k_k)
+
+    # per-shard below-r*/tie counts from the LOCAL histogram; exclusive
+    # scan over the shard order = global-index-order slot bases
+    cum_l = jnp.cumsum(hist_loc, axis=-1)
+    l_lt = jnp.where(r_star > 0, gather(cum_l, jnp.maximum(r_star - 1, 0)), 0)
+    l_tie = gather(hist_loc, r_star)
+    counts = jnp.stack([l_lt, l_tie], axis=-1)                       # (Q, 2)
+    g_counts = jax.lax.all_gather(counts, axes, tiled=False)
+    g_counts = g_counts.reshape(n_shards, Q, 2)
+    before = (jnp.arange(n_shards, dtype=jnp.int32) < flat)[:, None]
+    base_lt = jnp.sum(jnp.where(before, g_counts[:, :, 0], 0), axis=0)
+    base_tie = n_lt + jnp.sum(jnp.where(before, g_counts[:, :, 1], 0), axis=0)
+
+    # pass 2 locally: this shard's winners scatter straight into its
+    # disjoint global slots (padded query rows carry r* = -1: no emission)
+    q_pad = qp.shape[0] - Q
+    r_p = jnp.pad(r_star, (0, q_pad), constant_values=-1)
+    sb_p = jnp.pad(base_lt, (0, q_pad))
+    tb_p = jnp.pad(base_tie, (0, q_pad))
+    od, oi = hamming_emit_pallas(qp, xp, r_p, tb_p, bins, k_k, nv,
+                                 block_min=block_min, block_mask=block_mask,
+                                 slot_base=sb_p,
+                                 id_base=None if perm is not None else ib,
+                                 bq=bq, bn=bn, sub=sub, interpret=interp)
+    od, oi = od[:Q], oi[:Q]
+    if perm is not None:
+        # winners were emitted as layout positions: map them back to local
+        # ids on the slots THIS shard owns, zero elsewhere, so the psum
+        # below still assembles disjoint ranges
+        iota = jnp.arange(k_k, dtype=jnp.int32)[None, :]
+        owned = (((iota >= base_lt[:, None])
+                  & (iota < (base_lt + l_lt)[:, None]))
+                 | ((iota >= base_tie[:, None])
+                    & (iota < (base_tie + l_tie)[:, None])))
+        perm = jnp.asarray(perm, jnp.int32)
+        mapped = perm[jnp.minimum(oi, n_loc - 1)] + ib
+        oi = jnp.where(owned, mapped, 0)
+        od = jnp.where(owned, od, 0)
+
+    od = jax.lax.psum(od, axes)
+    oi = jax.lax.psum(oi, axes)
+
+    # untouched slots -> (bins, n_total) sentinels, one O(k log k) sort
+    return _finalize_slots(od, oi, n_emit, k, k_k, bins, nt)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -222,4 +391,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 __all__ = ["flash_attention", "hamming_distance", "hamming_hist",
-           "hamming_topk", "ref", "topk_geometry", "tuning"]
+           "hamming_topk", "hamming_topk_sharded", "ref", "topk_geometry",
+           "tuning"]

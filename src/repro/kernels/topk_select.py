@@ -55,6 +55,17 @@ and pass 2 composes the mask with the block-min bound. Because r* derives
 from the masked histogram, skipping disabled tiles in pass 2 is exact in
 the same sense as the block-min skip: no enabled (q, x) pair is ever
 dropped, disabled pairs were never candidates.
+
+The emit pass finally takes two **sharding hooks** — the paper's counters
+are additive partial histograms, so the same two kernels serve the
+distributed counting select (kernels/ops.py::hamming_topk_sharded) when a
+datastore spans several devices: ``slot_base`` (per-query initial value of
+the carried below-r* emit counter — this shard's exclusive-scan base into
+the global (Q, k) output) and ``id_base`` (a scalar added to every emitted
+row id, so winners leave the kernel carrying GLOBAL ids while untouched
+slots stay zero and a cross-device ``psum`` assembles the disjoint slot
+ranges without any gather/sort of candidates). Both default to zero, which
+is exactly the single-device behaviour.
 """
 from __future__ import annotations
 
@@ -178,16 +189,19 @@ def hamming_hist_pallas(q_packed: jax.Array, x_packed: jax.Array, bins: int,
 # pass 2: re-stream + emit winners (the "reports")
 # ---------------------------------------------------------------------------
 
-def _emit_kernel(nv_ref, en_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref,
-                 outd_ref, outi_ref, cnt_ref, *, bins: int, k: int, sub: int,
-                 bn: int):
+def _emit_kernel(nv_ref, ib_ref, en_ref, bm_ref, q_ref, x_ref, r_ref,
+                 nlt_ref, sb_ref, outd_ref, outi_ref, cnt_ref, *, bins: int,
+                 k: int, sub: int, bn: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         outd_ref[...] = jnp.zeros_like(outd_ref)
         outi_ref[...] = jnp.zeros_like(outi_ref)
-        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        # the carried below-r* counter starts at this shard's slot base
+        # (zero single-device): emitted winners land in [base, base+n_lt_loc)
+        cnt_ref[:, 0:1] = sb_ref[...]
+        cnt_ref[:, 1:2] = jnp.zeros_like(cnt_ref[:, 1:2])
 
     r_star = r_ref[...]                             # (BQ, 1)
 
@@ -200,6 +214,7 @@ def _emit_kernel(nv_ref, en_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref,
     @pl.when((en_ref[0, 0] != 0) & (bm_ref[0, 0] <= jnp.max(r_star)))
     def _work():
         n_valid = nv_ref[0]
+        id_base = ib_ref[0]
         q = q_ref[...]                              # (BQ, W)
         x = x_ref[...]                              # (BN, W)
         n_lt_total = nlt_ref[...]                   # (BQ, 1)
@@ -227,7 +242,7 @@ def _emit_kernel(nv_ref, en_ref, bm_ref, q_ref, x_ref, r_ref, nlt_ref,
             slot = jnp.minimum(slot, k)
             onehot = (slot[:, :, None] == slot_iota).astype(jnp.int32)
             od = od + jnp.sum(onehot * dist[:, :, None], axis=1)
-            oi = oi + jnp.sum(onehot * gid[:, :, None], axis=1)
+            oi = oi + jnp.sum(onehot * (gid + id_base)[:, :, None], axis=1)
             cnt_lt = cnt_lt + jnp.sum(is_lt.astype(jnp.int32), axis=1,
                                       keepdims=True)
             cnt_tie = cnt_tie + jnp.sum(is_tie.astype(jnp.int32), axis=1,
@@ -250,6 +265,8 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
                         n_valid: jax.Array | None = None,
                         block_min: jax.Array | None = None,
                         block_mask: jax.Array | None = None,
+                        slot_base: jax.Array | None = None,
+                        id_base: jax.Array | None = None,
                         bq: int = 64, bn: int = 1024, sub: int = 64,
                         interpret: bool = False):
     """Emit the top-k winners given the pass-1 radius.
@@ -263,6 +280,15 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
     ``block_mask``: the same enable mask pass 1 ran under (None = all
     enabled) — disabled tiles are outside the candidate set and never
     emit. The two guards compose; pass the SAME mask to both passes.
+
+    Sharding hooks (ops.py::hamming_topk_sharded): ``slot_base`` (Q,) int32
+    is the initial value of the carried below-r* counter — this shard's
+    exclusive-scan base into the global slot space (None = zeros); on the
+    distributed path ``n_lt`` likewise carries the shard's TIE slot base
+    (global n_lt plus the tie exclusive scan) rather than the raw global
+    count. ``id_base`` is a scalar added to every emitted row id (None = 0)
+    so winners leave with global ids while untouched slots stay zero.
+
     Returns (dists (Q, k), ids (Q, k)) int32, slot-ordered (NOT distance
     sorted): slots [0, n_lt) hold dist < r* rows in index order, subsequent
     slots hold r*-ties in index order; untouched slots are 0 — the caller
@@ -276,6 +302,8 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
     x32 = x_packed.astype(jnp.int32) if x_packed.dtype != jnp.int32 else x_packed
     nv = jnp.full((1,), N, jnp.int32) if n_valid is None else (
         jnp.asarray(n_valid, jnp.int32).reshape(1))
+    ib = (jnp.zeros((1,), jnp.int32) if id_base is None
+          else jnp.asarray(id_base, jnp.int32).reshape(1))
     bm = (jnp.zeros((Q // bq, N // bn), jnp.int32) if block_min is None
           else block_min.astype(jnp.int32))
     assert bm.shape == (Q // bq, N // bn), (bm.shape, Q // bq, N // bn)
@@ -284,6 +312,8 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
     assert en.shape == (Q // bq, N // bn), (en.shape, Q // bq, N // bn)
     r2 = r_star.astype(jnp.int32).reshape(Q, 1)
     nlt2 = n_lt.astype(jnp.int32).reshape(Q, 1)
+    sb2 = (jnp.zeros((Q, 1), jnp.int32) if slot_base is None
+           else slot_base.astype(jnp.int32).reshape(Q, 1))
 
     grid = (Q // bq, N // bn)
     return pl.pallas_call(
@@ -291,12 +321,14 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), lambda i, j: (i, j),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), lambda i, j: (i, j),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
         ],
@@ -310,4 +342,4 @@ def hamming_emit_pallas(q_packed: jax.Array, x_packed: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((bq, 2), jnp.int32)],
         interpret=interpret,
-    )(nv, en, bm, q32, x32, r2, nlt2)
+    )(nv, ib, en, bm, q32, x32, r2, nlt2, sb2)

@@ -150,6 +150,38 @@ def cost_hints(Q: int, N: int, W: int, lanes: int, *, path: str = "fused",
     }
 
 
+def shard_hints(Q: int, k: int, bins: int, n_shards: int, *,
+                k_local: int | None = None,
+                strategy: str = "hist_merge") -> dict:
+    """Shard geometry + predicted CROSS-DEVICE merge traffic per query
+    batch, for ``QueryPlan.explain()`` on sharded plans.
+
+    ``hist_merge`` (the distributed counting select) moves exactly three
+    tiny tensors between devices: the (Q, bins) int32 partial-histogram
+    psum, the (Q, 2)-per-shard slot-base all-gather, and the (Q, k) x2
+    disjoint-slot output psum — O(Q·bins), independent of n_shards·k.
+    ``concat_sort`` (the legacy hierarchical merge) all-gathers every
+    shard's (k' dists, k' ids): O(n_shards·Q·k') candidate bytes. Both are
+    reported so the ratio is inspectable whatever the plan chose."""
+    k_local = k if (k_local is None or k_local <= 0) else k_local
+    hist_psum = 4 * Q * bins
+    counts_gather = 2 * 4 * Q * n_shards
+    output_psum = 2 * 4 * Q * k
+    hist_total = hist_psum + counts_gather + output_psum
+    concat_total = 2 * 4 * Q * k_local * n_shards
+    return {
+        "n_shards": n_shards,
+        "strategy": strategy,
+        "merge_bytes": (hist_total if strategy == "hist_merge"
+                        else concat_total),
+        "hist_merge_bytes": hist_total,
+        "hist_psum_bytes": hist_psum,
+        "counts_gather_bytes": counts_gather,
+        "output_psum_bytes": output_psum,
+        "concat_sort_bytes": concat_total,
+    }
+
+
 def distance_blocks(Q: int, N: int, W: int,
                     backend: str | None = None) -> tuple[int, int]:
     """(bq, bn) for the materializing (Q, N) distance kernel: the (bq, bn)

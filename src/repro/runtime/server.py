@@ -36,19 +36,23 @@ class Request:
 
 class Server:
     def __init__(self, cfg: ModelConfig, mesh, params, *, max_batch: int,
-                 max_len: int, store=None):
+                 max_len: int, store=None, shard_axes=()):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.max_batch, self.max_len = max_batch, max_len
         self.store = store
         self.with_retrieval = cfg.retrieval.enabled and store is not None
         # resolve and log the retrieval QueryPlan once per store at startup
-        # (retrieval.log_store_plan — the store's local plan; the serve
-        # step's mesh/axes would refine it to the sharded plan once the
-        # dist-layer wiring passes them through)
+        # (retrieval.log_store_plan). ``shard_axes``: the mesh axes the
+        # serve step searches the datastore over — with them the logged
+        # plan is the SHARDED plan decode actually runs, including the
+        # merge strategy (hist_merge vs concat_sort) and its predicted
+        # cross-device traffic; without them it is the store's LOCAL plan.
         self.retrieval_plan = None
         if self.with_retrieval:
             self.retrieval_plan = retrieval_mod.log_store_plan(
-                store, cfg.retrieval, q=max_batch, logger=log)
+                store, cfg.retrieval, q=max_batch, logger=log,
+                mesh=mesh if shard_axes else None,
+                axes=tuple(shard_axes))
         self.serve_fn, _, self.sspecs = steps_mod.make_serve_step(
             cfg, mesh, max_len, with_retrieval=self.with_retrieval)
         with mesh:

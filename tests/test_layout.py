@@ -285,3 +285,51 @@ got = ref[np.arange(8)[:, None], np.asarray(ri)]
 assert (got == np.asarray(rd)).all()
 print("OK")
 """, n_devices=4)
+
+
+def test_invert_permutation_scatter():
+    """The O(N) scatter inverse equals the argsort inverse, and the layout
+    builder's inv field is exactly it."""
+    rng = np.random.default_rng(11)
+    perm = jnp.asarray(rng.permutation(513), jnp.int32)
+    inv = layout.invert_permutation(perm)
+    assert (inv == jnp.argsort(perm)).all()
+    assert (perm[inv] == jnp.arange(513)).all()
+    xb, _ = _uniform(8, 300, 1, 64)
+    lay = layout.build_layout(binary.pack_bits(xb), 64, n_buckets=8)
+    assert (lay.inv == layout.invert_permutation(lay.perm)).all()
+
+
+def test_local_sort_n_valid_pins_padding_last():
+    """The distributed path's uneven-shard contract: rows at id >= n_valid
+    keep positions >= n_valid after the sort (so in-kernel masking by
+    position stays exact), while valid rows sort exactly like a plain
+    local_sort of the valid prefix."""
+    xb, _ = _uniform(9, 256, 1, 64)
+    xp = binary.pack_bits(xb)
+    nv = 150
+    # make padding rows all-zero: they would sort FIRST if not pinned
+    xp = xp.at[nv:].set(0)
+    codes_s, perm = layout.local_sort(xp, 64, n_valid=nv)
+    assert (jnp.sort(perm) == jnp.arange(256)).all()
+    assert (perm[nv:] >= nv).all(), "padding leaked into the valid prefix"
+    assert (perm[:nv] < nv).all()
+    ref_codes, ref_perm = layout.local_sort(xp[:nv], 64,
+                                            bits=layout.default_bits(256))
+    assert (codes_s[:nv] == ref_codes).all()
+    assert (perm[:nv] == ref_perm).all()
+
+
+def test_position_mask_from_inv_matches_layout_mask():
+    """The distributed path's per-shard mask hook: a bare
+    (invert_permutation(perm), cand) pair must build exactly the mask the
+    BucketLayout-keyed helper builds (same scatter, no argsort)."""
+    xb, _ = _uniform(10, 1000, 6, 64)
+    xp = binary.pack_bits(xb)
+    lay = layout.build_layout(xp, 64, n_buckets=8)
+    rng = np.random.default_rng(12)
+    cand = jnp.asarray(rng.integers(-1, 1000, (6, 17)), jnp.int32)
+    a = layout.position_block_mask(lay, cand, 8, 128, 1, 8)
+    b = layout.position_block_mask_from_inv(
+        layout.invert_permutation(lay.perm), cand, 8, 128, 1, 8)
+    assert (a == b).all()

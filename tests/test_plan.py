@@ -225,6 +225,96 @@ def test_plan_sharded_stages():
     assert "ignored" in p2.reason
 
 
+def test_plan_sharded_merge_strategy():
+    """The merge-strategy rule: every exact sharded plan rides the
+    distributed counting select (auto resolves to fused FOR the merge);
+    the statistical reduction and non-fused selects keep concat_sort."""
+    stats = plan.StoreStats(n=1 << 12, d=64, w=2, q=8, n_shards=4)
+    p = plan.plan_sharded(stats, 10, axes=("data",))
+    assert p.select.path == "fused"
+    assert p.merge.strategy == "hist_merge"
+    assert p.compact().endswith("merge:hist_merge")
+    # k_local < k is the statistical reduction: concat_sort only
+    ps = plan.plan_sharded(stats, 10, axes=("data",), k_local=4)
+    assert ps.merge.strategy == "concat_sort"
+    assert "@k4" in ps.compact()
+    # merge=hist_merge on a statistical plan is noted-ignored, not honored
+    psf = plan.plan_sharded(stats, 10, axes=("data",), k_local=4,
+                            merge="hist_merge")
+    assert psf.merge.strategy == "concat_sort"
+    assert "ignored" in psf.reason
+    # a non-fused select cannot race histograms
+    pc = plan.plan_sharded(stats, 10, axes=("data",), select="counting")
+    assert pc.merge.strategy == "concat_sort"
+    # forcing the legacy merge keeps legacy auto-resolution (composite)
+    pl = plan.plan_sharded(stats, 10, axes=("data",), merge="concat_sort")
+    assert pl.merge.strategy == "concat_sort"
+    assert pl.select.path == "composite"
+    # uneven shards (per-shard n_valid coming) force the fused local
+    # select whatever the merge — only it masks padding exactly
+    pu = plan.plan_sharded(stats, 10, axes=("data",), k_local=4, uneven=True)
+    assert pu.select.path == "fused"
+    assert pu.merge.strategy == "concat_sort"
+    assert "uneven" in pu.reason
+    with pytest.raises(ValueError):
+        plan.plan_sharded(stats, 10, axes=("data",), merge="bogus")
+
+
+def test_force_merge_overrides():
+    """force_plan merge= key: demotions are recorded, never silent."""
+    stats = plan.StoreStats(n=1 << 12, d=64, w=2, q=8, n_shards=4)
+    # forced non-fused select on a hist_merge plan demotes the merge
+    p = plan.plan_sharded(stats, 10, axes=("data",), force="select=counting")
+    assert p.select.path == "counting"
+    assert p.merge.strategy == "concat_sort"
+    assert "demoted" in p.reason
+    # forced k_local < k likewise
+    p2 = plan.plan_sharded(stats, 10, axes=("data",), force="k_local=2")
+    assert p2.merge.strategy == "concat_sort" and p2.merge.k_local == 2
+    assert "demoted" in p2.reason
+    # forced concat_sort via the override string
+    p3 = plan.plan_sharded(stats, 10, axes=("data",), force="merge=concat_sort")
+    assert p3.merge.strategy == "concat_sort"
+    # merge on a local plan: noted, not applied
+    p4 = plan.plan_local(plan.StoreStats(n=512, d=32, w=1, q=2), 4,
+                         force="merge=hist_merge")
+    assert p4.merge.kind == "none"
+    assert "forced merge ignored" in p4.reason
+    with pytest.raises(ValueError):
+        plan.plan_sharded(stats, 10, axes=("data",), force="merge=bogus")
+
+
+def test_shard_hints_merge_traffic():
+    """explain() reports the predicted cross-device merge traffic: the
+    planner-chosen sharded plan moves O(Q*bins) histogram counts, not the
+    legacy O(shards*Q*k) candidates, and both predictions are exposed."""
+    from repro.kernels import tuning
+
+    q, k, d, s = 256, 16, 128, 8
+    stats = plan.StoreStats(n=1 << 17, d=d, w=4, q=q, n_shards=s,
+                            backend="cpu")
+    p = plan.plan_sharded(stats, k, axes=("data",))
+    m = p.explain()["geometry"]["merge"]
+    assert m["strategy"] == "hist_merge" and m["n_shards"] == s
+    bins = d + 1
+    assert m["hist_psum_bytes"] == 4 * q * bins
+    assert m["counts_gather_bytes"] == 2 * 4 * q * s
+    assert m["output_psum_bytes"] == 2 * 4 * q * k
+    assert m["merge_bytes"] == m["hist_merge_bytes"]
+    assert m["concat_sort_bytes"] == 2 * 4 * q * k * s
+    # the headline drop: O(Q*bins) counts beat O(shards*Q*k) candidates
+    assert m["merge_bytes"] < m["concat_sort_bytes"]
+    # concat bytes scale with shards; hist_merge's psum payload does not
+    m2 = tuning.shard_hints(q, k, bins, 2 * s, k_local=k)
+    assert m2["concat_sort_bytes"] == 2 * m["concat_sort_bytes"]
+    assert m2["hist_psum_bytes"] == m["hist_psum_bytes"]
+    # the forced legacy plan reports its own (bigger) prediction
+    pc = plan.plan_sharded(stats, k, axes=("data",), merge="concat_sort")
+    mc = pc.explain()["geometry"]["merge"]
+    assert mc["merge_bytes"] == mc["concat_sort_bytes"]
+    assert "merge:" in pc.explain_str() or "merge" in pc.explain_str()
+
+
 # ---------------------------------------------------------------------------
 # retrieval: config-driven planning + force_plan overrides
 # ---------------------------------------------------------------------------

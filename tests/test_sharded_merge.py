@@ -1,0 +1,249 @@
+"""Distributed counting select (merge="hist_merge"): the sharded
+equivalence matrix, run in subprocesses with 4 fake host devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=4 must precede the jax
+import, hence the multidevice fixture).
+
+Pins that the sharded fused search via hist_merge is BIT-IDENTICAL to the
+single-device fused reference and to the legacy concat/sort merge across
+the matrix the distributed path must cover: uniform shards, layout-sorted
+shards (reorder_local), per-shard enable masks, uneven shard sizes
+(per-shard n_valid), and k larger than one shard's valid rows.
+"""
+
+
+def test_hist_merge_uniform_matrix(multidevice):
+    """Even shards: planner picks hist_merge, results == single-device
+    fused reference == forced legacy concat/sort merge, dists AND ids."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import binary, engine, plan
+from repro.kernels import ops
+
+rng = np.random.default_rng(0)
+d, N, Q, k = 64, 2048, 8, 16
+xb = jnp.asarray(rng.integers(0, 2, (N, d)), jnp.uint8)
+qb = jnp.asarray(rng.integers(0, 2, (Q, d)), jnp.uint8)
+xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+
+rd, ri = ops.hamming_topk(qp, xp, k, d + 1)
+
+# the planner picks the distributed counting select for the sharded store
+stats = plan.stats_for(N, d, xp.shape[1], Q, n_shards=4)
+p = plan.plan_sharded(stats, k, axes=("data",))
+assert p.merge.strategy == "hist_merge", p.merge
+assert p.select.path == "fused", p.select
+assert "hist_merge" in p.compact()
+with mesh:
+    hd, hi = plan.execute(p, qp, codes=xp, mesh=mesh)
+assert (hd == rd).all() and (hi == ri).all(), "hist_merge != fused reference"
+
+# the legacy concat/sort merge stays available as a forced fallback and
+# agrees bit-for-bit
+pc = plan.plan_sharded(stats, k, axes=("data",), merge="concat_sort")
+assert pc.merge.strategy == "concat_sort"
+with mesh:
+    cd, ci = plan.execute(pc, qp, codes=xp, mesh=mesh)
+assert (cd == hd).all() and (ci == hi).all(), "concat_sort != hist_merge"
+
+# ... and through the force_plan override string
+pf = plan.plan_sharded(stats, k, axes=("data",), force="merge=concat_sort")
+assert pf.merge.strategy == "concat_sort"
+with mesh:
+    fd, fi = plan.execute(pf, qp, codes=xp, mesh=mesh)
+assert (fd == hd).all() and (fi == hi).all()
+
+# the engine entry point is a thin builder over the same plan
+with mesh:
+    sd, si = engine.search_sharded(xp, qp, k, d, mesh, ("data",))
+assert (sd == rd).all() and (si == ri).all()
+
+# statistical concat merge with fewer gathered candidates than k must
+# still honor the (Q, k) contract, padding with (d+1, N) sentinels
+with mesh:
+    td, ti = engine.search_sharded(xp, qp, k, d, mesh, ("data",), k_local=2)
+assert td.shape == (Q, k) and ti.shape == (Q, k), (td.shape, k)
+assert (td[:, 8:] == d + 1).all() and (ti[:, 8:] == N).all()
+# the 8 gathered candidates are real rows with their true distances
+# (statistical, so not necessarily the global top-8)
+ref = np.asarray(binary.hamming_ref(qb, xb))
+assert (ref[np.arange(Q)[:, None], np.asarray(ti[:, :8])]
+        == np.asarray(td[:, :8])).all()
+print("OK")
+""", n_devices=4)
+
+
+def test_hist_merge_uneven_and_k_exceeds_shard(multidevice):
+    """Uneven shards padded to a common slice (per-shard n_valid), with k
+    larger than one shard's valid rows and k larger than the global valid
+    total: bit-identical (sentinels included) to the single-device fused
+    reference over the concatenated VALID rows, on both merge paths."""
+    multidevice("""
+import warnings
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import binary, engine
+from repro.kernels import ops
+
+rng = np.random.default_rng(1)
+d, Q, n_loc = 64, 6, 512
+nv = np.array([300, 512, 11, 201], np.int32)      # shard 2: 11 valid rows
+xb = rng.integers(0, 2, (4 * n_loc, d)).astype(np.uint8)
+qb = jnp.asarray(rng.integers(0, 2, (Q, d)), jnp.uint8)
+xp_full = np.asarray(binary.pack_bits(jnp.asarray(xb)))
+parts, valid = [], []
+for s in range(4):
+    blk = xp_full[s * n_loc:(s + 1) * n_loc].copy()
+    valid.append(blk[:nv[s]].copy())
+    blk[nv[s]:] = 0xFFFFFFFF                       # padding rows: worst case
+    parts.append(blk)
+xpad = jnp.asarray(np.concatenate(parts))
+xval = jnp.asarray(np.concatenate(valid))
+qp = binary.pack_bits(qb)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+
+for k in (64, 1200):          # 64 > nv[2]; 1200 > sum(nv) = 1024
+    rd, ri = ops.hamming_topk(qp, xval, k, d + 1)
+    with mesh, warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        hd, hi = engine.search_sharded(xpad, qp, k, d, mesh, ("data",),
+                                       shard_n_valid=jnp.asarray(nv))
+        cd, ci = engine.search_sharded(xpad, qp, k, d, mesh, ("data",),
+                                       select="fused", merge="concat_sort",
+                                       shard_n_valid=jnp.asarray(nv))
+    assert (hd == rd).all() and (hi == ri).all(), ("hist_merge", k)
+    assert (cd == rd).all() and (ci == ri).all(), ("concat_sort", k)
+
+# statistical reduction over uneven shards: auto resolves to the fused
+# local select (only it masks per-shard padding), merge stays concat_sort
+with mesh:
+    pd_, pi_ = engine.search_sharded(xpad, qp, 16, d, mesh, ("data",),
+                                     k_local=4,
+                                     shard_n_valid=jnp.asarray(nv))
+rd16, _ = ops.hamming_topk(qp, xval, 16, d + 1)
+recall = float(jnp.mean(jnp.any(
+    np.asarray(pi_)[:, :, None] == np.asarray(ops.hamming_topk(qp, xval, 16, d + 1)[1])[:, None, :], axis=1)))
+assert recall > 0.5, recall
+
+# a forced materializing select cannot mask per-shard padding: refused
+# with guidance, not a bare AssertionError
+try:
+    with mesh, warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        engine.search_sharded(xpad, qp, 16, d, mesh, ("data",),
+                              select="counting",
+                              shard_n_valid=jnp.asarray(nv))
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "fused" in str(e)
+print("OK")
+""", n_devices=4)
+
+
+def test_hist_merge_reorder_local_layout(multidevice):
+    """Per-shard local_sort layout composes with hist_merge: the top-k
+    DISTANCE vector is layout-invariant (bit-identical to the reference)
+    and every returned id really has its reported distance — including on
+    uneven shards, where the sort must pin padding rows last."""
+    multidevice("""
+import warnings
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import binary, engine, plan
+from repro.kernels import ops
+
+rng = np.random.default_rng(2)
+d, N, Q, k = 64, 2048, 8, 16
+xb = jnp.asarray(rng.integers(0, 2, (N, d)), jnp.uint8)
+qb = jnp.asarray(rng.integers(0, 2, (Q, d)), jnp.uint8)
+xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+
+stats = plan.stats_for(N, d, xp.shape[1], Q, n_shards=4)
+p = plan.plan_sharded(stats, k, axes=("data",), reorder_local=True)
+assert p.merge.strategy == "hist_merge"
+assert p.candidates.layout == "local_sort"
+rd, _ = ops.hamming_topk(qp, xp, k, d + 1)
+with mesh:
+    sd, si = plan.execute(p, qp, codes=xp, mesh=mesh)
+assert (sd == rd).all()
+ref = np.asarray(binary.hamming_ref(qb, xb))
+assert (ref[np.arange(Q)[:, None], np.asarray(si)] == np.asarray(sd)).all()
+
+# uneven + reorder_local
+n_loc = 512
+nv = np.array([300, 512, 11, 201], np.int32)
+xp_np = np.asarray(xp)
+parts, valid = [], []
+for s in range(4):
+    blk = xp_np[s * n_loc:(s + 1) * n_loc].copy()
+    valid.append(blk[:nv[s]].copy())
+    blk[nv[s]:] = 0                                # near-zero padding: would
+    parts.append(blk)                              # sort FIRST if unpinned
+xpad = jnp.asarray(np.concatenate(parts))
+xval = jnp.asarray(np.concatenate(valid))
+k2 = 64
+rd2, _ = ops.hamming_topk(qp, xval, k2, d + 1)
+with mesh, warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    ud, ui = engine.search_sharded(xpad, qp, k2, d, mesh, ("data",),
+                                   reorder_local=True,
+                                   shard_n_valid=jnp.asarray(nv))
+assert (ud == rd2).all()
+refv = np.asarray(binary.hamming_ref(qb, binary.unpack_bits(xval, d)))
+assert (refv[np.arange(Q)[:, None], np.asarray(ui)] == np.asarray(ud)).all()
+print("OK")
+""", n_devices=4)
+
+
+def test_hist_merge_masked_shards(multidevice):
+    """Per-shard enable masks (core/layout.py contract) through the
+    distributed select: with pinned geometry, per-shard masks concatenate
+    into the single-device global mask, and hamming_topk_sharded must be
+    bit-identical to the masked single-device reference — r* derives from
+    the globally-merged MASKED histogram."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import binary
+from repro.kernels import ops
+
+rng = np.random.default_rng(3)
+d, Q, k, n_loc = 64, 8, 16, 1024
+N = 4 * n_loc
+xb = jnp.asarray(rng.integers(0, 2, (N, d)), jnp.uint8)
+qb = jnp.asarray(rng.integers(0, 2, (Q, d)), jnp.uint8)
+xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+geom = dict(bq=8, bn=256, sub=64)      # local grid (1, 4); global (1, 16)
+mask_g = jnp.asarray(rng.integers(0, 2, (1, 16)), jnp.int32)
+mask_g = mask_g.at[0, 5].set(1)        # keep at least one tile enabled
+rd, ri = ops.hamming_topk(qp, xp, k, d + 1, block_mask=mask_g, **geom)
+
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+def local(x_loc, q, m_loc):
+    return ops.hamming_topk_sharded(q, x_loc, k, d + 1, ("data",),
+                                    n_shards=4, block_mask=m_loc, **geom)
+fn = shard_map(local, mesh=mesh,
+               in_specs=(P("data", None), P(None, None), P(None, "data")),
+               out_specs=(P(None, None), P(None, None)))
+with mesh:
+    sd, si = fn(xp, qp, mask_g)
+assert (sd == rd).all() and (si == ri).all(), "masked shards != masked ref"
+
+# a query whose enabled rows number fewer than k gets the same sentinel
+# treatment as the single-device masked kernel
+mask_one = jnp.zeros((1, 16), jnp.int32).at[0, 3].set(1)
+rd1, ri1 = ops.hamming_topk(qp, xp, 300, d + 1, block_mask=mask_one, **geom)
+def local1(x_loc, q, m_loc):
+    return ops.hamming_topk_sharded(q, x_loc, 300, d + 1, ("data",),
+                                    n_shards=4, block_mask=m_loc, **geom)
+fn1 = shard_map(local1, mesh=mesh,
+                in_specs=(P("data", None), P(None, None), P(None, "data")),
+                out_specs=(P(None, None), P(None, None)))
+with mesh:
+    sd1, si1 = fn1(xp, qp, mask_one)
+assert (sd1 == rd1).all() and (si1 == ri1).all(), "k > enabled rows"
+print("OK")
+""", n_devices=4)
