@@ -1,0 +1,156 @@
+"""Open-loop serving soak bench: Poisson arrivals at configurable rates
+against the hardened server, measuring the SLO surface (p50/p99 token
+latency, shed/timeout/degraded fractions) under/at/over capacity, with
+optional fault injection.
+
+Standalone CLI (what CI's serve-soak-smoke job runs):
+    PYTHONPATH=src python benchmarks/bench_serve.py \
+        --ticks 200 --inject-faults --json BENCH_serve.json
+Exit code is non-zero if ANY request is lost (neither done, shed, nor
+timed out) — that is the invariant the soak exists to pin.
+
+Also registered in benchmarks/run.py (tag ``serve``) with a short preset.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import tempfile
+
+import numpy as np
+
+
+def _tiny_cfg():
+    from repro.configs import get_config, scaled_down
+    cfg = scaled_down(get_config("gemma-2b"), d_model=64, d_ff=128,
+                      vocab_size=256)
+    return dataclasses.replace(cfg, retrieval=dataclasses.replace(
+        cfg.retrieval, datastore_size=512, code_bits=64, k=8, chunk_size=512))
+
+
+def _build(cfg):
+    import jax
+    from repro import compat
+    from repro.core import retrieval
+    from repro.models import lm
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    store = retrieval.synthetic_datastore(cfg)
+    return mesh, params, store
+
+
+def run_rate(cfg, mesh, params, store, *, rate: float, ticks: int,
+             seed: int = 0, inject: bool = False, deadline: int = 50,
+             max_queue: int = 8, max_batch: int = 4, max_len: int = 24,
+             max_new_tokens: int = 8, snapshot_dir=None) -> dict:
+    """Drive one open-loop run: Poisson(rate) arrivals per tick for 70% of
+    ``ticks``, then drain (deadlines bound the drain)."""
+    from repro.runtime import faults as faults_mod, server as server_mod
+    inj = None
+    if inject:
+        inj = faults_mod.FaultInjector(
+            seed=seed + 1, p={"store_search": 0.05, "ckpt_save": 0.05,
+                              "ckpt_restore": 0.05})
+    srv = server_mod.Server(
+        cfg, mesh, params, max_batch=max_batch, max_len=max_len, store=store,
+        max_queue=max_queue, default_deadline_ticks=deadline,
+        degradation=server_mod.DegradationPolicy(queue_high=3, queue_low=1,
+                                                 cooldown_ticks=4),
+        fault_injector=inj, snapshot_dir=snapshot_dir if inject else None,
+        snapshot_every=10 if inject else None)
+    rng = np.random.default_rng(seed)
+    uid = 0
+    arrive_until = int(ticks * 0.7)
+    for t in range(ticks):
+        if t < arrive_until:
+            for _ in range(rng.poisson(rate)):
+                plen = int(rng.integers(1, 4))
+                srv.submit(server_mod.Request(
+                    uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size, plen).astype(
+                        np.int32),
+                    max_new_tokens=max_new_tokens))
+                uid += 1
+        srv.tick()
+    guard = ticks + deadline + 100
+    while srv.has_work and srv.ticks < guard:
+        srv.tick()
+    s = srv.stats()
+    s["rate"] = rate
+    s["inject_faults"] = inject
+    return s
+
+
+def sweep(rates=(0.2, 0.6, 2.0), ticks: int = 300, inject: bool = False,
+          seed: int = 0) -> list:
+    """Three arrival-rate rows: under / at / over the slot-pool capacity
+    (~0.5 req/tick at max_batch=4, 8 new tokens + prompt replay)."""
+    cfg = _tiny_cfg()
+    mesh, params, store = _build(cfg)
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for rate in rates:
+            rows.append(run_rate(cfg, mesh, params, store, rate=rate,
+                                 ticks=ticks, seed=seed, inject=inject,
+                                 snapshot_dir=tmp))
+    return rows
+
+
+def _row_line(s: dict) -> str:
+    derived = (f"rate={s['rate']};submitted={s['submitted']};"
+               f"done={s['done']};lost={s['lost']};"
+               f"p50_token_ms={s['p50_token_s'] * 1e3:.2f};"
+               f"p99_token_ms={s['p99_token_s'] * 1e3:.2f};"
+               f"shed_frac={s['shed_frac']:.3f};"
+               f"timeout_frac={s['timeout_frac']:.3f};"
+               f"degraded_frac={s['degraded_frac']:.3f};"
+               f"transitions={s['transitions']};"
+               f"search_retries={s['search_retries']}")
+    name = f"serve_r{s['rate']:g}" + ("_faults" if s["inject_faults"] else "")
+    return f"{name},{s['mean_tick_s'] * 1e6:.1f},{derived}"
+
+
+def run(report):
+    """benchmarks/run.py hook — short clean sweep (no fault injection,
+    timing-pure)."""
+    for s in sweep(rates=(0.2, 0.6, 2.0), ticks=120, inject=False):
+        report(_row_line(s))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=300)
+    ap.add_argument("--rates", default="0.2,0.6,2.0",
+                    help="comma-separated arrivals/tick (under/at/over)")
+    ap.add_argument("--inject-faults", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serve.json-style output to PATH")
+    args = ap.parse_args()
+
+    rates = tuple(float(r) for r in args.rates.split(","))
+    rows = sweep(rates=rates, ticks=args.ticks, inject=args.inject_faults,
+                 seed=args.seed)
+    print("name,us_per_call,derived")
+    for s in rows:
+        print(_row_line(s), flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serve", "config": "gemma-2b(tiny)",
+                       "ticks": args.ticks,
+                       "inject_faults": args.inject_faults,
+                       "rows": rows}, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+
+    lost = sum(s["lost"] for s in rows)
+    if lost:
+        print(f"LOST REQUESTS: {lost} — the no-lost-request invariant is "
+              "broken", file=sys.stderr)
+        raise SystemExit(1)
+    print("no lost requests", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

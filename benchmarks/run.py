@@ -13,8 +13,9 @@ import sys
 import traceback
 
 from benchmarks import (bench_compounding, bench_energy_proxy, bench_indexing,
-                        bench_packing, bench_statistical_reduction,
-                        bench_throughput, bench_workloads)
+                        bench_packing, bench_serve,
+                        bench_statistical_reduction, bench_throughput,
+                        bench_workloads)
 
 BENCHES = [
     ("fig4", bench_throughput),
@@ -24,6 +25,7 @@ BENCHES = [
     ("fig8", bench_packing),
     ("fig11", bench_statistical_reduction),
     ("fig15", bench_compounding),
+    ("serve", bench_serve),
 ]
 
 

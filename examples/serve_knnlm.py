@@ -39,17 +39,28 @@ def main():
     print(f"datastore: {store.codes.shape[0]} entries, "
           f"{cfg.retrieval.code_bits}-bit codes")
 
+    # hardened server: bounded queue, per-request deadlines, and a
+    # degradation ladder that downshifts retrieval under pressure
     srv = server.Server(cfg, mesh, params, max_batch=4, max_len=96,
-                        store=store)
+                        store=store, max_queue=16,
+                        default_deadline_ticks=200,
+                        degradation=server.DegradationPolicy())
     prompts = [np.asarray(corpus[i, :8]) for i in range(6)]
     for uid, p in enumerate(prompts):
-        srv.submit(server.Request(uid=uid, prompt=p, max_new_tokens=12))
+        admitted = srv.submit(server.Request(uid=uid, prompt=p,
+                                             max_new_tokens=12))
+        assert admitted, f"request {uid} shed at submit (queue full)"
     ticks = srv.run()
     print(f"served {len(srv.done)} requests in {ticks} decode ticks "
           f"(continuous batching over 4 slots)")
     for req in srv.done[:3]:
         print(f"  req {req.uid}: prompt {req.prompt.tolist()} -> "
               f"{req.out_tokens}")
+    s = srv.stats()
+    print(f"SLO: p50 token {s['p50_token_s'] * 1e3:.2f} ms, "
+          f"p99 token {s['p99_token_s'] * 1e3:.2f} ms, "
+          f"shed {s['shed']}, timed out {s['timed_out']}, "
+          f"degraded frac {s['degraded_frac']:.2f}, lost {s['lost']}")
 
 
 if __name__ == "__main__":

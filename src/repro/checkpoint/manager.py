@@ -46,9 +46,43 @@ def _from_savable(arr: np.ndarray, ref) -> np.ndarray:
     return np.asarray(arr, dtype=ref_dtype).reshape(ref.shape)
 
 
+class SaveHandle:
+    """Handle for an async ``save``. ``result()`` (alias ``join()``) blocks
+    until the writer thread finishes and RE-RAISES any exception it hit —
+    async save failures must surface at the join point, never vanish with
+    the thread."""
+
+    def __init__(self, thread: threading.Thread, errbox: dict):
+        self._thread = thread
+        self._errbox = errbox
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def result(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+        exc = self._errbox.get("exc")
+        if exc is not None:
+            raise exc
+
+    # drop-in for callers that treated the return as a bare Thread
+    join = result
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+
 def save(root: str, step: int, tree: Any, process_index: int = 0,
-         blocking: bool = True) -> Optional[threading.Thread]:
-    """Atomically write ``tree`` (pytree of arrays) for ``step``."""
+         blocking: bool = True,
+         fault_hook: Optional[Any] = None) -> Optional[SaveHandle]:
+    """Atomically write ``tree`` (pytree of arrays) for ``step``.
+
+    ``fault_hook`` (zero-arg callable) runs mid-write — after the tmp dir
+    is populated, before the rename — i.e. at the point a kill leaves an
+    orphaned ``step_*.tmp*`` dir and the PREVIOUS committed step intact
+    (fault-injection seam; see runtime/faults.py). Non-blocking saves
+    return a ``SaveHandle`` whose ``result()``/``join()`` re-raises writer
+    exceptions."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     host_leaves = [_to_savable(np.asarray(l)) for l in leaves]
 
@@ -61,6 +95,8 @@ def save(root: str, step: int, tree: Any, process_index: int = 0,
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, "n_leaves": len(host_leaves),
                        "treedef": str(treedef), "time": time.time()}, f)
+        if fault_hook is not None:
+            fault_hook()
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -70,9 +106,17 @@ def save(root: str, step: int, tree: Any, process_index: int = 0,
     if blocking:
         _write()
         return None
-    t = threading.Thread(target=_write, daemon=False)
+    errbox: dict = {}
+
+    def _guarded_write():
+        try:
+            _write()
+        except BaseException as e:  # noqa: BLE001 — delivered via result()
+            errbox["exc"] = e
+
+    t = threading.Thread(target=_guarded_write, daemon=False)
     t.start()
-    return t
+    return SaveHandle(t, errbox)
 
 
 def latest_step(root: str) -> Optional[int]:
@@ -91,9 +135,12 @@ def latest_step(root: str) -> Optional[int]:
 
 
 def restore(root: str, step: int, like: Any, shardings: Any = None,
-            process_index: int = 0) -> Any:
+            process_index: int = 0, fault_hook: Optional[Any] = None) -> Any:
     """Load ``step`` into the structure of ``like``; device_put with
-    ``shardings`` when given (elastic re-shard happens here)."""
+    ``shardings`` when given (elastic re-shard happens here).
+    ``fault_hook`` runs before the read (injection seam)."""
+    if fault_hook is not None:
+        fault_hook()
     path = os.path.join(_step_dir(root, step), f"proc_{process_index}.npz")
     data = np.load(path)
     leaves, treedef = jax.tree_util.tree_flatten(like)
@@ -105,14 +152,20 @@ def restore(root: str, step: int, like: Any, shardings: Any = None,
     return tree
 
 
-def restore_latest(root: str, like: Any, shardings: Any = None):
+def restore_latest(root: str, like: Any, shardings: Any = None,
+                   fault_hook: Optional[Any] = None):
     step = latest_step(root)
     if step is None:
         return None, None
-    return step, restore(root, step, like, shardings)
+    return step, restore(root, step, like, shardings,
+                         fault_hook=fault_hook)
 
 
 def garbage_collect(root: str, keep: int = 3):
+    """Trim to the newest ``keep`` committed steps AND sweep orphaned
+    ``step_*.tmp*`` dirs left by crashed/failed saves. A tmp dir is only
+    stale — hence removable — when its step does not exceed the newest
+    COMMITTED step: anything newer could be an in-flight async save."""
     if not os.path.isdir(root):
         return
     steps = sorted(
@@ -121,3 +174,15 @@ def garbage_collect(root: str, keep: int = 3):
         and os.path.exists(os.path.join(root, n, "COMMITTED")))
     for s in steps[:-keep]:
         shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+    newest = steps[-1] if steps else None
+    if newest is None:
+        return
+    for n in os.listdir(root):
+        if not (n.startswith("step_") and ".tmp" in n):
+            continue
+        try:
+            s = int(n.split(".")[0].split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if s <= newest:
+            shutil.rmtree(os.path.join(root, n), ignore_errors=True)

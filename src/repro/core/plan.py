@@ -1012,6 +1012,8 @@ def _scenario_rows(flat, lay, k):
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",), select="counting",
                       reorder_local=True)),
+        ("serving degradation rung: hamming-prefix probe, reduced nprobe",
+         plan_index(lay, k, kind="hamming_prefix", nprobe=8)),
     ]
 
 

@@ -139,11 +139,64 @@ def log_store_plan(store: DataStore, rcfg: RetrievalConfig, q: int,
     return p
 
 
+def probe_key_positions(store: DataStore,
+                        rcfg: RetrievalConfig) -> Optional[jax.Array]:
+    """The hamming-prefix key-bit positions of ``store.layout``.
+
+    ``build_layout``'s pure-Hamming fallback keys buckets by the
+    ``log2(n_buckets)`` most balanced bit positions — a deterministic
+    function of the codes, so recomputing the selection here reproduces
+    the exact bucket ids the layout was clustered by. Returns None when
+    the store has no layout or a non-power-of-two bucket count (i.e. a
+    layout whose assignment did not come from the hamming-prefix key, such
+    as an external k-means assign): degraded probing is unavailable there.
+    """
+    lay = store.layout
+    if lay is None:
+        return None
+    bits = lay.n_buckets.bit_length() - 1
+    if (1 << bits) != lay.n_buckets:
+        return None
+    _, positions = layout_mod.hamming_prefix_assign(store.codes,
+                                                    rcfg.code_bits, bits)
+    return positions
+
+
+def degraded_plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
+                            nprobe: int) -> plan_mod.QueryPlan:
+    """The reduced-nprobe masked plan a degradation rung serves with:
+    hamming-prefix key probing feeds the block-mask fused kernels, same
+    shape as an IVF probe but with no float centroids."""
+    stats = plan_mod.stats_for(store.codes.shape[0], rcfg.code_bits,
+                               store.codes.shape[1], q, k=rcfg.k,
+                               layout=store.layout)
+    return plan_mod.plan_index(stats, rcfg.k, kind="hamming_prefix",
+                               nprobe=nprobe)
+
+
+def _bucket_probe(q_codes: jax.Array, positions: jax.Array, n_buckets: int,
+                  nprobe: int, d: int) -> jax.Array:
+    """(Q, W) packed queries -> (Q, nprobe) bucket ids, nearest first.
+
+    A bucket's id IS its key bit pattern (``hamming_prefix_assign``), so
+    probe ranking is the Hamming distance between the query's key bits and
+    each bucket id — no centroid table to consult."""
+    bits = positions.shape[0]
+    qb = binary.unpack_bits(q_codes, d)[:, positions].astype(jnp.int32)
+    bucket_bits = (jnp.arange(n_buckets, dtype=jnp.int32)[:, None]
+                   >> jnp.arange(bits, dtype=jnp.int32)[None, :]) & 1
+    dist = jnp.sum(qb[:, None, :] != bucket_bits[None, :, :], axis=-1)
+    _, probe = jax.lax.top_k(-dist, min(nprobe, n_buckets))
+    return probe.astype(jnp.int32)
+
+
 def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
                vocab: int, mesh: Optional[Mesh] = None,
                axes: Sequence[str] = (), method: str = "xor",
                temperature: float = 8.0,
-               select: Optional[str] = None) -> jax.Array:
+               select: Optional[str] = None,
+               nprobe: int = 0,
+               probe_positions: Optional[jax.Array] = None) -> jax.Array:
     """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab).
 
     A thin plan-builder: ``plan_for_store`` resolves the select path,
@@ -153,23 +206,35 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
     search. "fused" streams the whole datastore through one two-pass
     Pallas invocation without ever materializing distances —
     ``rcfg.chunk_size`` only granulates the materializing/'fused_scan'
-    scans. Inspect the decision with ``plan_for_store(...).explain()``."""
-    p = plan_for_store(store, rcfg, hidden.shape[0], mesh=mesh, axes=axes,
-                       method=method, select=select)
+    scans. Inspect the decision with ``plan_for_store(...).explain()``.
+
+    ``nprobe > 0`` with ``probe_positions`` (``probe_key_positions``)
+    switches to the DEGRADED masked search the serving ladder downshifts
+    to: only the ``nprobe`` nearest hamming-prefix buckets are scanned."""
     q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
-    if p.merge.kind == "sharded":
-        dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
-                                      mesh=mesh)
+    if nprobe > 0 and store.layout is not None and probe_positions is not None:
+        p = degraded_plan_for_store(store, rcfg, hidden.shape[0], nprobe)
+        probe = _bucket_probe(q_codes, probe_positions,
+                              store.layout.n_buckets, nprobe, rcfg.code_bits)
+        dists, ids = plan_mod.execute(p, q_codes, layout=store.layout,
+                                      probe=probe)
     else:
-        dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
-                                      layout=store.layout)
+        p = plan_for_store(store, rcfg, hidden.shape[0], mesh=mesh,
+                           axes=axes, method=method, select=select)
+        if p.merge.kind == "sharded":
+            dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
+                                          mesh=mesh)
+        else:
+            dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
+                                          layout=store.layout)
     n = store.values.shape[0]
     # fewer than k valid neighbors -> the engine pads with sentinels
-    # (dist = d+1, id >= N): they must not receive softmax weight or vote
-    # for values[N-1]; mask them out of the neighbor distribution (an
-    # all-invalid row degenerates to p = 0 and hits the log floor below)
-    valid = (ids < n) & (dists <= rcfg.code_bits)                # (Q, k)
-    neighbor_tokens = store.values[jnp.minimum(ids, n - 1)]      # (Q, k)
+    # (full scans: dist = d+1, id >= N; masked probes: id = -1): they must
+    # not receive softmax weight or vote for values[N-1]; mask them out of
+    # the neighbor distribution (an all-invalid row degenerates to p = 0
+    # and hits the log floor below)
+    valid = (ids >= 0) & (ids < n) & (dists <= rcfg.code_bits)   # (Q, k)
+    neighbor_tokens = store.values[jnp.clip(ids, 0, n - 1)]      # (Q, k)
     w = jax.nn.softmax(
         jnp.where(valid, -dists.astype(jnp.float32) / temperature, -jnp.inf),
         axis=-1)

@@ -1,0 +1,2 @@
+"""Distributed execution layer: sharding-spec derivation and the jitted
+train/prefill/serve step builders every runtime component goes through."""

@@ -1,0 +1,69 @@
+"""PartitionSpec derivation for params, optimizer/decode state and the
+retrieval datastore.
+
+Specs are replicated (``P()``) by default: on the CPU test meshes every
+axis has size 1, and the compiler is free to re-layout under jit. The
+datastore is the one operand with a real distribution story — the sharded
+search path re-shards it explicitly via ``engine.shard_datastore`` /
+``plan_sharded``, so ``datastore_specs`` only has to hand ``device_put`` a
+structure-matching spec tree. Model/optimizer tensor parallelism rides the
+same seam when a non-trivial mesh shows up: swap the leaf specs here and
+every caller (trainer, server, dry-run) inherits them.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import quantize, retrieval as retrieval_mod
+from repro.models import lm
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def replicated_like(tree: Any) -> Any:
+    """A pytree of ``P()`` (fully replicated) specs matching ``tree``."""
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+def named(mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``.
+
+    ``PartitionSpec`` subclasses tuple, so the map must treat specs as
+    leaves — otherwise tree_map would recurse into them.
+    """
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=_is_spec)
+
+
+def param_specs(cfg: ModelConfig, mesh=None) -> Any:
+    """Specs for ``lm.init_params(cfg)`` (structure from eval_shape)."""
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    return replicated_like(shapes)
+
+
+def decode_state_specs(cfg: ModelConfig, mesh=None) -> Any:
+    """Specs for ``lm.init_decode_state`` (structure is batch/len-free)."""
+    shapes = jax.eval_shape(lambda: lm.init_decode_state(cfg, 1, 2))
+    return replicated_like(shapes)
+
+
+def datastore_specs(mesh=None, store=None) -> Any:
+    """Specs matching a ``retrieval.DataStore`` pytree.
+
+    Without ``store``, assumes the common ``layout=None`` store (the shape
+    every arch config builds by default); pass the concrete store to match
+    a layout-carrying structure.
+    """
+    if store is not None:
+        return replicated_like(store)
+    return retrieval_mod.DataStore(
+        codes=P(), values=P(),
+        itq=quantize.ITQParams(mean=P(), proj=P(), rot=P()),
+        layout=None)

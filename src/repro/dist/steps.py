@@ -1,0 +1,174 @@
+"""Jitted step builders: the one place train/prefill/serve computations are
+assembled and compiled.
+
+Every builder returns the jitted step plus the PartitionSpec trees its
+operands live under (``sharding`` module semantics). The serve builder is
+memoized per (cfg, mesh, max_len, retrieval-variant): the hardened server
+keeps several degradation rungs alive at once (full exact plan, masked
+probe at reduced nprobe, retrieval-off) and failover must not recompile a
+rung it already has.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import retrieval as retrieval_mod
+from repro.dist import sharding
+from repro.models import lm
+from repro.optim import optimizer
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Every mesh axis except the tensor/expert axis is data parallel."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig, *,
+                    causal_skip: bool = False, attn_p_bf16: bool = False,
+                    pure_dp: bool = False, moe_a2a_int8: bool = False,
+                    donate: bool = True):
+    """Returns (step_fn, param_specs, opt_specs).
+
+    ``step_fn(params, opt_state, batch, step) -> (params, opt_state,
+    metrics)`` with metrics at least {loss, ce, aux, grad_norm, lr}.
+    ``pure_dp`` drops the mesh from the model context (reference MoE path,
+    no expert parallelism). ``tc.microbatches > 1`` accumulates gradients
+    over a scan (activation memory / M).
+    """
+    ctx = lm.RunCtx(mesh=None if pure_dp else mesh, dp_axes=dp_axes(mesh),
+                    causal_skip=causal_skip, attn_p_bf16=attn_p_bf16,
+                    moe_a2a_int8=moe_a2a_int8, remat=tc.remat)
+    micro = max(int(tc.microbatches), 1)
+
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, ctx)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(params, opt_state, batch, step_idx):
+        if micro > 1:
+            def split(x):
+                return x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, b):
+                (lval, aux), grads = grad_fn(params, b)
+                acc = jax.tree_util.tree_map(jnp.add, carry[0], grads)
+                return (acc, carry[1] + lval,
+                        jax.tree_util.tree_map(jnp.add, carry[2], aux)), None
+
+            zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+            zero_a = {"ce": jnp.float32(0.0), "aux": jnp.float32(0.0)}
+            (grads, lsum, asum), _ = jax.lax.scan(
+                body, (zero_g, jnp.float32(0.0), zero_a), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / micro, grads)
+            lval = lsum / micro
+            aux = jax.tree_util.tree_map(lambda a: a / micro, asum)
+        else:
+            (lval, aux), grads = grad_fn(params, batch)
+        new_params, new_opt, om = optimizer.update(
+            grads, opt_state, params, tc, step_idx)
+        metrics = dict(aux)
+        metrics.update(om)
+        metrics["loss"] = lval
+        return new_params, new_opt, metrics
+
+    pspecs = sharding.param_specs(cfg, mesh)
+    oshapes = jax.eval_shape(
+        lambda: optimizer.init(
+            jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg)),
+            tc))
+    ospecs = sharding.replicated_like(oshapes)
+    step_fn = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    return step_fn, pspecs, ospecs
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh, seq_len: int, *,
+                      causal_skip: bool = False, attn_p_bf16: bool = False,
+                      attn_chunk: int = 1024, attn_impl: str = "xla"):
+    """Returns (prefill_fn, param_specs); ``prefill_fn(params, batch) ->
+    (logits, decode_state)`` over the full prompt."""
+    ctx = lm.RunCtx(mesh=mesh, dp_axes=dp_axes(mesh),
+                    causal_skip=causal_skip, attn_p_bf16=attn_p_bf16,
+                    attn_chunk=attn_chunk, attn_impl=attn_impl)
+
+    def prefill_fn(params, batch):
+        return lm.prefill(params, cfg, batch["tokens"],
+                          batch.get("prefix_emb"), ctx)
+
+    return jax.jit(prefill_fn), sharding.param_specs(cfg, mesh)
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+# (cfg, mesh, max_len, with_retrieval, nprobe, id(probe_positions)) ->
+# (serve_fn, pspecs, sspecs). Degradation rung switches and failover paths
+# re-request builders mid-serve; the cache makes that free.
+_SERVE_CACHE: dict = {}
+
+
+def make_serve_step(cfg: ModelConfig, mesh, max_len: int, *,
+                    with_retrieval: Optional[bool] = None,
+                    global_batch: Optional[int] = None,
+                    nprobe: int = 0, probe_positions=None):
+    """Returns (serve_fn, param_specs, state_specs).
+
+    ``serve_fn(params, token (B,1), state, active (B,)[, store]) ->
+    (logits (B,1,V) f32, new_state)`` — one decode step for every active
+    slot; the store argument exists iff retrieval is on. ``nprobe > 0``
+    (with the store's hamming-prefix ``probe_positions``) builds the
+    DEGRADED serving variant: masked IVF-style probe over the layout at
+    reduced nprobe instead of the full exact plan. ``global_batch`` is
+    accepted for dry-run symmetry; shapes come from the operands.
+    """
+    if with_retrieval is None:
+        with_retrieval = cfg.retrieval.enabled
+    key = None
+    try:
+        key = (cfg, mesh, int(max_len), bool(with_retrieval), int(nprobe),
+               id(probe_positions) if probe_positions is not None else None)
+        if key in _SERVE_CACHE:
+            return _SERVE_CACHE[key]
+    except TypeError:            # unhashable cfg/mesh: skip memoization
+        key = None
+
+    ctx = lm.RunCtx(mesh=mesh, dp_axes=dp_axes(mesh))
+    rcfg = cfg.retrieval
+
+    if with_retrieval:
+        def serve_fn_py(params, token, state, active, store):
+            logits, new_state, hidden = lm.decode_step(
+                params, cfg, token, state, ctx, active=active,
+                return_hidden=True)
+            knn = retrieval_mod.knn_logits(
+                store, hidden[:, 0, :], rcfg, cfg.vocab_size,
+                nprobe=nprobe, probe_positions=probe_positions)
+            mixed = retrieval_mod.interpolate(logits[:, 0, :], knn,
+                                              rcfg.interpolation)
+            return mixed[:, None, :], new_state
+    else:
+        def serve_fn_py(params, token, state, active):
+            logits, new_state = lm.decode_step(
+                params, cfg, token, state, ctx, active=active)
+            return logits.astype(jnp.float32), new_state
+
+    pspecs = sharding.param_specs(cfg, mesh)
+    sspecs = sharding.decode_state_specs(cfg, mesh)
+    out = (jax.jit(serve_fn_py), pspecs, sspecs)
+    if key is not None:
+        _SERVE_CACHE[key] = out
+    return out

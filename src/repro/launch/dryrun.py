@@ -104,6 +104,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     mem = compiled.memory_analysis()
     print(mem)                                    # proves it fits
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: list of per-program dicts
+        cost = cost[0] if cost else {}
+    cost = cost or {}
     print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
     mem_stats = {
         "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),

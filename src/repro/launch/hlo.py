@@ -162,7 +162,14 @@ def _operand_names(ln: str, opcode: str) -> List[str]:
             if depth == 0:
                 break
         buf.append(ch)
-    return re.findall(r"%?([\w.\-]+)", "".join(buf))
+    args_str = "".join(buf)
+    # Newer XLA prints operand types inline ("f32[128,128]{1,0} %name");
+    # when %-prefixed names are present, take only those, else the bare
+    # dtype/dim tokens would shadow the real operand names.
+    named = re.findall(r"%([\w.\-]+)", args_str)
+    if named:
+        return named
+    return re.findall(r"([\w.\-]+)", args_str)
 
 
 def _trip_count(cond_lines: List[str]) -> int:

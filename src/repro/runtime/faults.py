@@ -1,0 +1,84 @@
+"""Seeded fault injection and bounded retry for the serving/checkpoint path.
+
+The injector is probability-per-call and fully seeded: a soak run with the
+same seed injects the same fault sequence, so "survives 500 ticks at
+p=0.05" is a reproducible pin, not a flake. Sites are plain strings — the
+server uses ``store_search`` around the retrieval step and
+``ckpt_save``/``ckpt_restore`` through the checkpoint manager's
+``fault_hook`` seam.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by the injector (always transient by construction)."""
+
+    def __init__(self, site: str):
+        super().__init__(f"injected fault at {site!r}")
+        self.site = site
+
+
+# Exception classes the retry loops treat as transient. Anything else is a
+# real bug and must propagate — retrying around it would hide it.
+TRANSIENT = (InjectedFault, TimeoutError, ConnectionError)
+
+
+class FaultInjector:
+    """Seeded probability-per-call fault injector.
+
+    ``p`` maps site -> probability a call at that site raises
+    ``InjectedFault``; ``stall`` maps site -> (probability, seconds) a call
+    sleeps before proceeding (a slow store, not a dead one). Counters per
+    site (``calls``/``fired``/``stalled``) let tests assert faults actually
+    exercised the path under test.
+    """
+
+    def __init__(self, seed: int = 0,
+                 p: Optional[Mapping[str, float]] = None,
+                 stall: Optional[Mapping[str, Tuple[float, float]]] = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        import numpy as np
+        self._rng = np.random.default_rng(seed)
+        self.p: Dict[str, float] = dict(p or {})
+        self.stall: Dict[str, Tuple[float, float]] = dict(stall or {})
+        self._sleep = sleep
+        self.calls: Dict[str, int] = {}
+        self.fired: Dict[str, int] = {}
+        self.stalled: Dict[str, int] = {}
+
+    def check(self, site: str) -> None:
+        """Maybe stall, maybe raise — call at the top of a faultable op."""
+        self.calls[site] = self.calls.get(site, 0) + 1
+        sp = self.stall.get(site)
+        if sp is not None and self._rng.random() < sp[0]:
+            self.stalled[site] = self.stalled.get(site, 0) + 1
+            self._sleep(sp[1])
+        if self._rng.random() < self.p.get(site, 0.0):
+            self.fired[site] = self.fired.get(site, 0) + 1
+            raise InjectedFault(site)
+
+    def hook(self, site: str) -> Callable[[], None]:
+        """Zero-arg adapter for ``fault_hook`` seams (checkpoint manager)."""
+        return lambda: self.check(site)
+
+
+def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,
+               max_backoff_s: float = 0.05, transient=TRANSIENT,
+               on_retry: Optional[Callable] = None,
+               sleep: Callable[[float], None] = time.sleep):
+    """Call ``fn()`` with up to ``retries`` retries on transient errors,
+    doubling the backoff between attempts; the last error re-raises."""
+    delay = backoff_s
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except transient as e:
+            if attempt == retries:
+                raise
+            if on_retry is not None:
+                on_retry(e, attempt)
+            sleep(delay)
+            delay = min(delay * 2.0, max_backoff_s)

@@ -47,7 +47,10 @@ def test_cost_analysis_is_loop_blind_motivation():
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     compiled = jax.jit(scanned).lower(x, w).compile()
-    blind = float(compiled.cost_analysis().get("flops", 0.0))
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: list of per-program dicts
+        cost = cost[0] if cost else {}
+    blind = float((cost or {}).get("flops", 0.0))
     aware = hlo.analyze(compiled.as_text())["flops"]
     assert aware > 5 * blind                     # ~10x here
 
