@@ -1,0 +1,344 @@
+"""Fault-injected churn soak over the crash-safe mutable datastore
+(core/mutable.py), plus a paired static-vs-churned search latency row.
+
+The soak drives a Poisson mix of append/delete/search/flush/snapshot ops
+against a ``MutableStore`` with faults armed (p per call, default 0.05) at
+the three sites — ``wal_append``, ``compact_build``, ``epoch_install``.
+Every fired fault is treated as a CRASH: the in-memory store is abandoned
+and ``MutableStore.recover()`` rebuilds it from the last committed
+snapshot + WAL tail. An acked-mutation ledger (external id -> (code,
+value)) is checked against the recovered state after every crash and at
+the end; the final state must also be bit-identical to a from-scratch
+``build_arena`` rebuild of the same logical rows.
+
+Standalone CLI (what CI's mutate-soak-smoke job runs):
+    PYTHONPATH=src python benchmarks/bench_mutate.py \
+        --ops 600 --fault-p 0.05 --json BENCH_mutate.json
+Exit code is non-zero on ANY lost acknowledged mutation, phantom row,
+failed audit, or bit-identity break — those are the invariants the soak
+exists to pin.
+
+Also registered in benchmarks/run.py (tag ``mutate``) with a short,
+fault-free preset that reports the static-vs-churned pair.
+"""
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+def _mk_codes(rng, n: int, d: int) -> np.ndarray:
+    return rng.integers(0, 2 ** 32, size=(n, d // 32), dtype=np.uint32)
+
+
+def _recover(root, inj, **kw):
+    """Recovery is idempotent, so a fault DURING recovery is just another
+    crash — retry. The injector stays armed so recovery itself is
+    exercised under faults; after many consecutive crashes (vanishingly
+    unlikely at p=0.05) fall back to a clean recovery and flag it."""
+    from repro.core import mutable
+    from repro.runtime import faults as faults_mod
+    for _ in range(64):
+        try:
+            return mutable.MutableStore.recover(
+                root, fault_injector=inj, **kw), True
+        except faults_mod.InjectedFault:
+            continue
+    return mutable.MutableStore.recover(root, fault_injector=None, **kw), False
+
+
+def _epoch_state(store):
+    """(ids, codes, values) of the installed epoch as host arrays."""
+    ep = store.epoch
+    return (np.asarray(ep.store_ids), np.asarray(ep.layout.codes),
+            np.asarray(ep.values))
+
+
+def _reconcile(store, model, in_doubt, report):
+    """After a crash-recovery: every acked mutation must be present in the
+    recovered state; in-doubt ops (the single op that raised) are resolved
+    to whatever the recovered truth says."""
+    ids, codes, values = _epoch_state(store)
+    got = {int(ids[i]): (codes[i].tobytes(), int(values[i]))
+           for i in range(ids.shape[0])}
+    if in_doubt is not None:
+        kind, payload = in_doubt
+        if kind == "append":
+            for ext_id, code, val in payload:
+                if ext_id in got:
+                    model[ext_id] = (code, val)
+                    report["in_doubt_applied"] += 1
+                else:
+                    report["in_doubt_dropped"] += 1
+        elif kind == "delete":
+            for ext_id in payload:
+                if ext_id not in got and ext_id in model:
+                    del model[ext_id]
+                    report["in_doubt_applied"] += 1
+                else:
+                    report["in_doubt_dropped"] += 1
+        # flush/compact/snapshot in-doubt: derived state only, no ledger
+        # change either way
+    for ext_id, (code, val) in model.items():
+        if ext_id not in got:
+            report["lost_acks"] += 1
+        elif got[ext_id] != (code, val):
+            report["corrupt_rows"] += 1
+    for ext_id in got:
+        if ext_id not in model:
+            report["phantoms"] += 1
+    return set(got)
+
+
+def soak(*, ops: int = 600, fault_p: float = 0.05, seed: int = 0,
+         d: int = 64, n0: int = 256) -> dict:
+    """Run the churn soak; returns a report dict (see keys below).
+    ``ok`` is True iff no acked mutation was lost, no phantom/corrupt row
+    appeared, and every audit passed."""
+    from repro.core import layout as layout_mod
+    from repro.core import mutable
+    from repro.runtime import faults as faults_mod
+
+    rng = np.random.default_rng(seed)
+    inj = faults_mod.FaultInjector(
+        seed=seed + 1, p={"wal_append": fault_p, "compact_build": fault_p,
+                          "epoch_install": fault_p})
+    store_kw = dict(slack_frac=0.15, min_slack=2, tombstone_frac=0.1,
+                    max_pending=256)
+    report = {"ops": 0, "crashes": 0, "recoveries": 0, "audits": 0,
+              "lost_acks": 0, "phantoms": 0, "corrupt_rows": 0,
+              "in_doubt_applied": 0, "in_doubt_dropped": 0,
+              "appends": 0, "deletes": 0, "searches": 0, "flushes": 0,
+              "snapshots": 0, "stale_search_hits": 0,
+              "clean_recovery_fallback": 0}
+
+    with tempfile.TemporaryDirectory() as root:
+        codes0 = _mk_codes(rng, n0, d)
+        store = mutable.MutableStore.create(
+            codes0, d, values=np.arange(n0, dtype=np.int32), root=root,
+            fault_injector=inj, **store_kw)
+        model = {int(i): (codes0[i].tobytes(), i) for i in range(n0)}
+        # ids searchable in the CURRENT epoch = model as of the last flush
+        visible = set(model)
+
+        for _ in range(ops):
+            report["ops"] += 1
+            op = rng.choice(["append", "delete", "search", "flush",
+                             "snapshot"], p=[0.40, 0.25, 0.17, 0.15, 0.03])
+            in_doubt = None
+            try:
+                if op == "append":
+                    n = int(rng.poisson(3)) + 1
+                    codes = _mk_codes(rng, n, d)
+                    vals = rng.integers(0, 1 << 20, n).astype(np.int32)
+                    in_doubt = ("append", [
+                        (int(store._next_id) + i, codes[i].tobytes(),
+                         int(vals[i])) for i in range(n)])
+                    ids = store.append(codes, values=vals)
+                    for i, ext in enumerate(ids):
+                        model[int(ext)] = (codes[i].tobytes(), int(vals[i]))
+                    report["appends"] += n
+                elif op == "delete":
+                    if not model:
+                        continue
+                    n = min(int(rng.poisson(2)) + 1, len(model))
+                    victims = sorted(int(v) for v in rng.choice(
+                        np.fromiter(model, np.int64), n, replace=False))
+                    in_doubt = ("delete", victims)
+                    store.delete(np.asarray(victims, np.int64))
+                    for v in victims:
+                        del model[v]
+                    report["deletes"] += n
+                elif op == "search":
+                    q = _mk_codes(rng, 4, d)
+                    _, ext = store.search(q, k=8)
+                    bad = [int(e) for e in np.asarray(ext).ravel()
+                           if int(e) >= 0 and int(e) not in visible]
+                    report["stale_search_hits"] += len(bad)
+                    report["searches"] += 1
+                elif op == "flush":
+                    in_doubt = ("flush", None)
+                    store.flush()
+                    visible = set(model)
+                    report["flushes"] += 1
+                elif op == "snapshot":
+                    in_doubt = ("snapshot", None)
+                    store.snapshot()
+                    report["snapshots"] += 1
+            except faults_mod.InjectedFault:
+                report["crashes"] += 1
+                store.close()       # crash: abandon all in-memory state
+                (store, clean) = _recover(root, inj, **store_kw)
+                if not clean:
+                    report["clean_recovery_fallback"] += 1
+                report["recoveries"] += 1
+                # recover() already ran a strict audit; run one more
+                # explicitly so the report counts it
+                store.audit()
+                report["audits"] += 1
+                visible = _reconcile(store, model, in_doubt, report)
+
+        # final: crash once more, recover cold, verify the full ledger
+        store.close()
+        store, _ = _recover(root, None, **store_kw)
+        store.audit()
+        report["audits"] += 1
+        report["recoveries"] += 1
+        _reconcile(store, model, None, report)
+
+        # bit-identity: the recovered epoch must equal a from-scratch
+        # build_arena over the same logical rows with the frozen key bits
+        store.compact()
+        ep = store.flush()
+        live = sorted(model)
+        m_ids = np.asarray(live, np.int64)
+        m_codes = np.stack([np.frombuffer(model[i][0], np.uint32)
+                            for i in live]) if live else \
+            np.zeros((0, d // 32), np.uint32)
+        m_vals = np.asarray([model[i][1] for i in live], np.int32)
+        ref = mutable.MutableStore(layout_mod.build_arena(
+            m_codes, d, ids=m_ids, values=m_vals,
+            positions=store.arena.positions,
+            slack_frac=store_kw["slack_frac"],
+            min_slack=store_kw["min_slack"]))
+        ep_ref = ref.flush()
+        report["bit_identical"] = bool(
+            np.array_equal(np.asarray(ep.layout.codes),
+                           np.asarray(ep_ref.layout.codes))
+            and np.array_equal(np.asarray(ep.store_ids),
+                               np.asarray(ep_ref.store_ids))
+            and np.array_equal(np.asarray(ep.values),
+                               np.asarray(ep_ref.values))
+            and np.array_equal(np.asarray(ep.layout.starts),
+                               np.asarray(ep_ref.layout.starts)))
+        q = _mk_codes(rng, 8, d)
+        d1, i1 = store.search(q, k=8)
+        d2, i2 = ref.search(q, k=8)
+        report["search_identical"] = bool(np.array_equal(d1, d2)
+                                          and np.array_equal(i1, i2))
+        report["n_live_final"] = len(model)
+        report["fired"] = dict(inj.fired)
+        report["fault_calls"] = dict(inj.calls)
+        report["store"] = store.stats()
+        store.close()
+
+    report["ok"] = (report["lost_acks"] == 0 and report["phantoms"] == 0
+                    and report["corrupt_rows"] == 0
+                    and report["stale_search_hits"] == 0
+                    and report["bit_identical"]
+                    and report["search_identical"])
+    return report
+
+
+# -- paired static-vs-churned latency row (fig4-style) ----------------------
+
+def _brute_topk(codes: np.ndarray, q: np.ndarray, k: int) -> np.ndarray:
+    """Exact hamming top-k id sets via numpy popcount (ground truth)."""
+    x = np.bitwise_xor(codes[None, :, :], q[:, None, :])
+    dist = np.unpackbits(x.view(np.uint8), axis=-1).sum(-1)
+    return np.argsort(dist, kind="stable", axis=-1)[:, :k]
+
+
+def _time_search(store, q, k: int, iters: int = 5) -> float:
+    store.search(q, k)                      # warm (trace/compile)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        store.search(q, k)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def churn_pair(*, n: int = 2048, d: int = 64, churn: float = 0.2,
+               k: int = 16, q_n: int = 16, seed: int = 0):
+    """Two rows: search over a static arena vs the same store after
+    ``churn`` fraction deletes + equal-size appends (compacted +
+    flushed). Both run the identical plan over their installed epoch;
+    recall vs exact hamming ground truth is reported so the latency
+    comparison is at matched quality."""
+    from repro.core import mutable
+    rng = np.random.default_rng(seed)
+    codes = _mk_codes(rng, n, d)
+    q = _mk_codes(rng, q_n, d)
+    store = mutable.MutableStore.create(codes, d, slack_frac=0.5)
+
+    rows = []
+
+    def _row(name, st):
+        us = _time_search(st, q, k)
+        ids_live, codes_live, _ = _epoch_state(st)
+        truth = ids_live[_brute_topk(codes_live, q, k)]
+        _, got = st.search(q, k)
+        rec = np.mean([len(set(truth[i]) & set(int(e) for e in got[i]))
+                       for i in range(q_n)]) / k
+        rows.append(f"{name},{us:.1f},n_live={st.n_live};k={k};"
+                    f"recall={rec:.3f};epoch_seq={st.epoch_seq}")
+
+    _row(f"mutate_static_n{n}", store)
+    n_churn = int(n * churn)
+    victims = np.sort(rng.choice(n, n_churn, replace=False)).astype(np.int64)
+    store.delete(victims)
+    store.append(_mk_codes(rng, n_churn, d))
+    store.compact()
+    store.flush()
+    _row(f"mutate_churn{int(churn * 100)}_n{n}", store)
+    return rows
+
+
+def run(report):
+    """benchmarks/run.py hook — fault-free static-vs-churned pair plus a
+    tiny smoke soak (must hold its invariants even here)."""
+    for line in churn_pair(n=1024, d=64, churn=0.2, k=16, q_n=8):
+        report(line)
+    s = soak(ops=60, fault_p=0.05, seed=0, n0=128)
+    assert s["ok"], f"mutate soak invariants broken: {s}"
+    report(f"mutate_soak,{0.0:.1f},ops={s['ops']};crashes={s['crashes']};"
+           f"lost_acks={s['lost_acks']};phantoms={s['phantoms']};"
+           f"n_live={s['n_live_final']};bit_identical={s['bit_identical']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", type=int, default=600)
+    ap.add_argument("--fault-p", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n0", type=int, default=256)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--skip-pair", action="store_true",
+                    help="soak only (faster CI smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_mutate.json-style output to PATH")
+    args = ap.parse_args()
+
+    rep = soak(ops=args.ops, fault_p=args.fault_p, seed=args.seed,
+               d=args.d, n0=args.n0)
+    pair = [] if args.skip_pair else churn_pair(d=args.d, seed=args.seed)
+    print("name,us_per_call,derived")
+    for line in pair:
+        print(line, flush=True)
+    print(f"soak: ops={rep['ops']} crashes={rep['crashes']} "
+          f"recoveries={rep['recoveries']} lost_acks={rep['lost_acks']} "
+          f"phantoms={rep['phantoms']} corrupt={rep['corrupt_rows']} "
+          f"stale={rep['stale_search_hits']} "
+          f"bit_identical={rep['bit_identical']} "
+          f"search_identical={rep['search_identical']} "
+          f"fired={rep['fired']}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "mutate", "ops": args.ops,
+                       "fault_p": args.fault_p, "seed": args.seed,
+                       "soak": rep, "pair_rows": pair}, f, indent=1)
+        print(f"wrote soak report to {args.json}", file=sys.stderr)
+    if not rep["ok"]:
+        print("MUTATE SOAK FAILED: an acked mutation was lost, a phantom/"
+              "corrupt row appeared, or bit-identity broke", file=sys.stderr)
+        raise SystemExit(1)
+    print("soak ok: zero acked-mutation loss, all audits passed",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

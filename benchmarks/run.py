@@ -13,7 +13,7 @@ import sys
 import traceback
 
 from benchmarks import (bench_compounding, bench_energy_proxy, bench_indexing,
-                        bench_packing, bench_serve,
+                        bench_mutate, bench_packing, bench_serve,
                         bench_statistical_reduction, bench_throughput,
                         bench_workloads)
 
@@ -26,6 +26,7 @@ BENCHES = [
     ("fig11", bench_statistical_reduction),
     ("fig15", bench_compounding),
     ("serve", bench_serve),
+    ("mutate", bench_mutate),
 ]
 
 

@@ -94,6 +94,9 @@ def save(root: str, step: int, tree: Any, process_index: int = 0,
                  **{f"leaf_{i:05d}": l for i, l in enumerate(host_leaves)})
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, "n_leaves": len(host_leaves),
+                       "leaves": [{"shape": list(l.shape),
+                                   "dtype": str(l.dtype)}
+                                  for l in host_leaves],
                        "treedef": str(treedef), "time": time.time()}, f)
         if fault_hook is not None:
             fault_hook()
@@ -119,32 +122,79 @@ def save(root: str, step: int, tree: Any, process_index: int = 0,
     return SaveHandle(t, errbox)
 
 
-def latest_step(root: str) -> Optional[int]:
+def committed_steps(root: str) -> list:
+    """All committed steps, ascending."""
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for name in os.listdir(root):
-        if name.startswith("step_") and not name.endswith((".tmp0", ".tmp")):
+        if name.startswith("step_") and ".tmp" not in name:
             path = os.path.join(root, name)
             if os.path.exists(os.path.join(path, "COMMITTED")):
                 try:
                     steps.append(int(name.split("_")[1]))
                 except ValueError:
                     continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = committed_steps(root)
+    return steps[-1] if steps else None
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A committed checkpoint failed verification against its meta.json
+    (missing/truncated leaf file, wrong leaf count, or shape drift)."""
+
+
+def _read_verified_leaves(root: str, step: int, process_index: int,
+                          n_expected: Optional[int] = None) -> list:
+    """Load a step's leaves, verified against meta.json — restore must
+    never trust leaf files blindly: a truncated npz or a shape that
+    drifted from what save() recorded raises :class:`CheckpointCorrupt`
+    (callers like ``restore_latest`` then fall back to the PREVIOUS
+    committed step instead of blowing up mid-serve)."""
+    sdir = _step_dir(root, step)
+    if not os.path.isdir(sdir):
+        # a step that was never written is a caller error, not corruption
+        raise FileNotFoundError(sdir)
+    try:
+        with open(os.path.join(sdir, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorrupt(f"step {step}: unreadable meta.json: {e}")
+    n_leaves = meta.get("n_leaves")
+    if not isinstance(n_leaves, int):
+        raise CheckpointCorrupt(f"step {step}: meta.json lacks n_leaves")
+    try:
+        data = np.load(os.path.join(sdir, f"proc_{process_index}.npz"))
+        loaded = [data[f"leaf_{i:05d}"] for i in range(n_leaves)]
+    except Exception as e:  # zipfile/KeyError/OSError: truncated or short
+        raise CheckpointCorrupt(f"step {step}: bad leaf file: {e}")
+    if n_expected is not None and n_leaves != n_expected:
+        raise CheckpointCorrupt(
+            f"step {step}: {n_leaves} leaves saved, {n_expected} expected")
+    for i, (l, m) in enumerate(zip(loaded, meta.get("leaves") or [])):
+        if list(l.shape) != m["shape"] or str(l.dtype) != m["dtype"]:
+            raise CheckpointCorrupt(
+                f"step {step}: leaf {i} is {l.shape}/{l.dtype}, meta says "
+                f"{tuple(m['shape'])}/{m['dtype']}")
+    return loaded
 
 
 def restore(root: str, step: int, like: Any, shardings: Any = None,
             process_index: int = 0, fault_hook: Optional[Any] = None) -> Any:
     """Load ``step`` into the structure of ``like``; device_put with
     ``shardings`` when given (elastic re-shard happens here).
-    ``fault_hook`` runs before the read (injection seam)."""
+    ``fault_hook`` runs before the read (injection seam). Raises
+    :class:`CheckpointCorrupt` when the step fails verification against
+    its meta.json."""
     if fault_hook is not None:
         fault_hook()
-    path = os.path.join(_step_dir(root, step), f"proc_{process_index}.npz")
-    data = np.load(path)
     leaves, treedef = jax.tree_util.tree_flatten(like)
-    loaded = [data[f"leaf_{i:05d}"] for i in range(len(leaves))]
+    loaded = _read_verified_leaves(root, step, process_index,
+                                   n_expected=len(leaves))
     loaded = [_from_savable(l, ref) for l, ref in zip(loaded, leaves)]
     tree = jax.tree_util.tree_unflatten(treedef, loaded)
     if shardings is not None:
@@ -154,11 +204,44 @@ def restore(root: str, step: int, like: Any, shardings: Any = None,
 
 def restore_latest(root: str, like: Any, shardings: Any = None,
                    fault_hook: Optional[Any] = None):
-    step = latest_step(root)
-    if step is None:
-        return None, None
-    return step, restore(root, step, like, shardings,
-                         fault_hook=fault_hook)
+    """Restore the newest committed step that VERIFIES — a corrupt or
+    truncated newest checkpoint falls back to the previous committed step
+    (mid-serve robustness: stale data beats a crash), exhausting all of
+    them returns (None, None)."""
+    last_err = None
+    for step in reversed(committed_steps(root)):
+        try:
+            return step, restore(root, step, like, shardings,
+                                 fault_hook=fault_hook)
+        except CheckpointCorrupt as e:
+            last_err = e
+    if last_err is not None:
+        import logging
+        logging.getLogger(__name__).warning(
+            "no verifiable checkpoint under %s (last: %s)", root, last_err)
+    return None, None
+
+
+def restore_latest_arrays(root: str, process_index: int = 0,
+                          fault_hook: Optional[Any] = None):
+    """Structure-free restore: the newest VERIFIED committed step's leaves
+    as a flat list of host arrays, falling back past corrupt steps like
+    ``restore_latest``. For state whose shapes change over its lifetime
+    (the mutable store's arena grows/shrinks), where no ``like`` template
+    can exist ahead of the load; meta.json's recorded shapes/dtypes are
+    the verification reference instead."""
+    if fault_hook is not None:
+        fault_hook()
+    for step in reversed(committed_steps(root)):
+        try:
+            n = json.load(open(os.path.join(_step_dir(root, step),
+                                            "meta.json")))["n_leaves"]
+            return step, _read_verified_leaves(root, step, process_index,
+                                               n_expected=n)
+        except (CheckpointCorrupt, OSError, json.JSONDecodeError,
+                KeyError):
+            continue
+    return None, None
 
 
 def garbage_collect(root: str, keep: int = 3):

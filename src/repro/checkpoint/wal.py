@@ -1,0 +1,163 @@
+"""Write-ahead intent log for the mutable datastore.
+
+Durability contract: a mutation is ACKNOWLEDGED only after its record is
+appended, flushed, and fsynced here — so "acked" means "replayable". The
+arena, the epoch, and every snapshot are derived state; a crash at any
+point between the fsync and the next snapshot loses nothing that was
+acked, because recovery replays the tail of this log on top of the last
+committed snapshot (core/mutable.py).
+
+Record framing (little-endian, self-delimiting):
+
+    [u32 magic][u64 seq][u8 kind][u32 payload_len][payload][u32 crc32]
+
+The CRC (zlib.crc32 — stdlib; same family as the xxhash-style arena
+checksum, chosen to add no dependency) covers seq..payload. Replay stops
+cleanly at the first bad magic, short read, or CRC mismatch — a torn tail
+from a crash mid-append truncates to the last whole record instead of
+poisoning the log. Records carry opaque payload bytes; the codecs for
+append/delete payloads live with the store that owns their schema.
+
+``fault_hook`` runs BEFORE anything is written: an injected fault at the
+``wal_append`` site means the record never reached the file, the caller
+never acked, and recovery owes the client nothing for it.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Callable, Iterator, List, NamedTuple, Optional
+
+MAGIC = 0x57414C31          # "WAL1"
+_HEADER = struct.Struct("<IQBI")    # magic, seq, kind, payload_len
+_CRC = struct.Struct("<I")
+
+# record kinds (payload schema owned by core/mutable.py)
+APPEND = 1
+DELETE = 2
+COMPACT_BEGIN = 3
+COMPACT_COMMIT = 4
+SNAPSHOT = 5
+
+KIND_NAMES = {APPEND: "append", DELETE: "delete",
+              COMPACT_BEGIN: "compact_begin",
+              COMPACT_COMMIT: "compact_commit", SNAPSHOT: "snapshot"}
+
+# refuse absurd payloads during replay: a corrupt length field must not
+# turn into a multi-GiB read before the CRC gets a chance to reject it
+MAX_PAYLOAD = 1 << 30
+
+
+class Record(NamedTuple):
+    seq: int
+    kind: int
+    payload: bytes
+
+
+class WalCorrupt(RuntimeError):
+    """An interior record failed validation (not a clean torn tail)."""
+
+
+class WriteAheadLog:
+    """Append-only intent log. One writer; readers use :func:`replay`."""
+
+    def __init__(self, path: str,
+                 fault_hook: Optional[Callable[[], None]] = None):
+        self.path = path
+        self._fault_hook = fault_hook
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "ab")
+
+    def append(self, kind: int, payload: bytes, seq: int) -> None:
+        """Durably append one record (flush + fsync before returning)."""
+        if self._fault_hook is not None:
+            self._fault_hook()
+        crc = zlib.crc32(_HEADER.pack(MAGIC, seq, kind, len(payload))[4:])
+        crc = zlib.crc32(payload, crc)
+        self._f.write(_HEADER.pack(MAGIC, seq, kind, len(payload)))
+        self._f.write(payload)
+        self._f.write(_CRC.pack(crc))
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "WriteAheadLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def iter_records(path: str, strict: bool = False) -> Iterator[Record]:
+    """Yield whole records; stop at the torn tail.
+
+    A partial final record (crash mid-append) is normal and silently ends
+    iteration. ``strict=True`` raises :class:`WalCorrupt` instead — used
+    by audits that want to distinguish "clean tail" from "torn tail":
+    iteration position is the byte offset of the first bad frame either
+    way."""
+    if not os.path.exists(path):
+        return
+    with open(path, "rb") as f:
+        while True:
+            head = f.read(_HEADER.size)
+            if len(head) == 0:
+                return                      # clean end
+            if len(head) < _HEADER.size:
+                _torn(strict, "short header")
+                return
+            magic, seq, kind, plen = _HEADER.unpack(head)
+            if magic != MAGIC or plen > MAX_PAYLOAD:
+                _torn(strict, f"bad magic/length at seq~{seq}")
+                return
+            payload = f.read(plen)
+            tail = f.read(_CRC.size)
+            if len(payload) < plen or len(tail) < _CRC.size:
+                _torn(strict, "short payload/crc")
+                return
+            crc = zlib.crc32(head[4:])
+            crc = zlib.crc32(payload, crc)
+            if _CRC.unpack(tail)[0] != crc:
+                _torn(strict, f"crc mismatch at seq {seq}")
+                return
+            yield Record(seq, kind, payload)
+
+
+def _torn(strict: bool, what: str) -> None:
+    if strict:
+        raise WalCorrupt(what)
+
+
+def replay(path: str, after_seq: int = -1) -> List[Record]:
+    """All whole records with ``seq > after_seq``, in log order."""
+    return [r for r in iter_records(path) if r.seq > after_seq]
+
+
+def last_seq(path: str) -> int:
+    """Highest seq among whole records, or -1 for an empty/missing log."""
+    seq = -1
+    for r in iter_records(path):
+        seq = max(seq, r.seq)
+    return seq
+
+
+def rewrite(path: str, records: List[Record]) -> None:
+    """Atomically replace the log with ``records`` (post-snapshot
+    truncation: drop everything a committed snapshot already covers).
+    Written to a tmp file, fsynced, then renamed over the original."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        for r in records:
+            crc = zlib.crc32(
+                _HEADER.pack(MAGIC, r.seq, r.kind, len(r.payload))[4:])
+            crc = zlib.crc32(r.payload, crc)
+            f.write(_HEADER.pack(MAGIC, r.seq, r.kind, len(r.payload)))
+            f.write(r.payload)
+            f.write(_CRC.pack(crc))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)

@@ -93,6 +93,15 @@ class KNNEngine(NamedTuple):
     def n(self) -> int:
         return self.codes.shape[0]
 
+    @classmethod
+    def from_epoch(cls, epoch, d: int) -> "KNNEngine":
+        """Engine pinned to one installed epoch of a mutable store
+        (core/mutable.py). The epoch's dense codes ARE the layout's codes
+        (identity perm), so this engine keeps serving a complete,
+        consistent snapshot no matter how the store mutates afterwards —
+        grab a new engine from a newer epoch to see newer data."""
+        return cls(codes=epoch.layout.codes, d=d, layout=epoch.layout)
+
     def with_layout(self, n_buckets: int | None = None,
                     assign: jax.Array | None = None) -> "KNNEngine":
         """Engine with a bucket-clustered layout: by explicit bucket

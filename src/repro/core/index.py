@@ -55,6 +55,26 @@ def _pad_buckets(assign: np.ndarray, n_buckets: int, cap: int) -> np.ndarray:
     return table
 
 
+def hamming_prefix_probe(q_codes: jax.Array, positions: jax.Array,
+                         n_buckets: int, nprobe: int, d: int) -> jax.Array:
+    """(Q, W) packed queries -> (Q, nprobe) hamming-prefix bucket ids,
+    nearest first.
+
+    The centroid-free probe: a bucket's id IS its key bit pattern
+    (``layout.hamming_prefix_assign``), so probe ranking is the Hamming
+    distance between the query's key bits and each bucket id — no table to
+    consult. Shared by the serving degradation ladder (retrieval) and the
+    mutable store's epoch probing; ``positions`` must be the positions the
+    layout was actually bucketed by (frozen ones for mutable stores)."""
+    bits = positions.shape[0]
+    qb = binary.unpack_bits(q_codes, d)[:, positions].astype(jnp.int32)
+    bucket_bits = (jnp.arange(n_buckets, dtype=jnp.int32)[:, None]
+                   >> jnp.arange(bits, dtype=jnp.int32)[None, :]) & 1
+    dist = jnp.sum(qb[:, None, :] != bucket_bits[None, :, :], axis=-1)
+    _, probe = jax.lax.top_k(-dist, min(nprobe, n_buckets))
+    return probe.astype(jnp.int32)
+
+
 def _dedup_candidates(cand: jax.Array) -> jax.Array:
     """Mask repeated ids in a (Q, C) candidate list to -1 (padding).
 

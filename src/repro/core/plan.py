@@ -1014,6 +1014,15 @@ def _scenario_rows(flat, lay, k):
                       reorder_local=True)),
         ("serving degradation rung: hamming-prefix probe, reduced nprobe",
          plan_index(lay, k, kind="hamming_prefix", nprobe=8)),
+        ("mutable store: search over one installed epoch",
+         dataclasses.replace(
+             plan_local(lay, k),
+             reason="epoch pinning: the mutable store's flush() installs "
+                    "a dense, identity-perm BucketLayout of exactly the "
+                    "live rows (slack + tombstones trimmed at install), "
+                    "so the planner sees an ordinary prebuilt layout and "
+                    "every rule above applies unchanged — readers keep "
+                    "the pinned epoch for the whole search")),
     ]
 
 

@@ -27,6 +27,13 @@ class DataStore(NamedTuple):
     # single-device fused select streams layout.codes and maps winners back
     # to original ids, so `values` never needs reordering
     layout: Optional[layout_mod.BucketLayout] = None
+    # the hamming-prefix key bit positions the layout was bucketed by,
+    # when the builder FROZE them (mutable stores must: re-deriving the
+    # "most balanced" bits from mutated codes drifts away from how the
+    # arena is actually bucketed, silently mis-aiming every degraded
+    # probe). None -> probe_key_positions recomputes them, which is exact
+    # for one-shot static builds.
+    key_positions: Optional[jax.Array] = None
 
 
 def _maybe_layout(codes: jax.Array, code_bits: int, rcfg_layout: str,
@@ -154,6 +161,8 @@ def probe_key_positions(store: DataStore,
     lay = store.layout
     if lay is None:
         return None
+    if store.key_positions is not None:
+        return store.key_positions     # frozen at build (mutable stores)
     bits = lay.n_buckets.bit_length() - 1
     if (1 << bits) != lay.n_buckets:
         return None
@@ -177,17 +186,11 @@ def degraded_plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
 def _bucket_probe(q_codes: jax.Array, positions: jax.Array, n_buckets: int,
                   nprobe: int, d: int) -> jax.Array:
     """(Q, W) packed queries -> (Q, nprobe) bucket ids, nearest first.
-
-    A bucket's id IS its key bit pattern (``hamming_prefix_assign``), so
-    probe ranking is the Hamming distance between the query's key bits and
-    each bucket id — no centroid table to consult."""
-    bits = positions.shape[0]
-    qb = binary.unpack_bits(q_codes, d)[:, positions].astype(jnp.int32)
-    bucket_bits = (jnp.arange(n_buckets, dtype=jnp.int32)[:, None]
-                   >> jnp.arange(bits, dtype=jnp.int32)[None, :]) & 1
-    dist = jnp.sum(qb[:, None, :] != bucket_bits[None, :, :], axis=-1)
-    _, probe = jax.lax.top_k(-dist, min(nprobe, n_buckets))
-    return probe.astype(jnp.int32)
+    Thin alias for :func:`index.hamming_prefix_probe` — the probe ranking
+    is index policy, shared with the mutable store's degraded path."""
+    from repro.core import index as index_mod
+    return index_mod.hamming_prefix_probe(q_codes, positions, n_buckets,
+                                          nprobe, d)
 
 
 def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,

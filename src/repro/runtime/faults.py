@@ -5,7 +5,10 @@ same seed injects the same fault sequence, so "survives 500 ticks at
 p=0.05" is a reproducible pin, not a flake. Sites are plain strings — the
 server uses ``store_search`` around the retrieval step and
 ``ckpt_save``/``ckpt_restore`` through the checkpoint manager's
-``fault_hook`` seam.
+``fault_hook`` seam; the mutable datastore (core/mutable.py) adds
+``wal_append`` (before the intent-log write — a fired fault means the
+mutation was never acked), ``compact_build`` (before the rebuilt arena is
+swapped in), and ``epoch_install`` (before a fresh epoch is swapped in).
 """
 from __future__ import annotations
 
@@ -68,10 +71,25 @@ class FaultInjector:
 def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,
                max_backoff_s: float = 0.05, transient=TRANSIENT,
                on_retry: Optional[Callable] = None,
-               sleep: Callable[[float], None] = time.sleep):
-    """Call ``fn()`` with up to ``retries`` retries on transient errors,
-    doubling the backoff between attempts; the last error re-raises."""
-    delay = backoff_s
+               sleep: Callable[[float], None] = time.sleep,
+               jitter: str = "full", rng=None):
+    """Call ``fn()`` with up to ``retries`` retries on transient errors;
+    the last error re-raises.
+
+    Backoff is FULL-JITTERED by default: attempt ``i`` sleeps
+    ``U(0, min(max_backoff_s, backoff_s * 2**i))`` — the exponential
+    envelope caps at ``max_backoff_s`` (the max-delay cap) and the uniform
+    draw decorrelates the many slots that all hit the same recovering
+    store at once; plain synchronized doubling would have every retry
+    stampede it on the same schedule. ``jitter="none"`` keeps the legacy
+    deterministic doubling (still capped). ``rng`` seeds the draws (an int
+    or a numpy Generator) so fault soaks stay reproducible."""
+    assert jitter in ("full", "none"), jitter
+    if jitter == "full":
+        import numpy as np
+        if not hasattr(rng, "uniform"):
+            rng = np.random.default_rng(rng)
+    delay = min(backoff_s, max_backoff_s)
     for attempt in range(retries + 1):
         try:
             return fn()
@@ -80,5 +98,5 @@ def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,
                 raise
             if on_retry is not None:
                 on_retry(e, attempt)
-            sleep(delay)
+            sleep(rng.uniform(0.0, delay) if jitter == "full" else delay)
             delay = min(delay * 2.0, max_backoff_s)

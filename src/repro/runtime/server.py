@@ -26,6 +26,12 @@ rung at a time —
 per ``cooldown_ticks`` of calm. Injected/real transient search failures
 retry with bounded backoff, then try restoring the datastore from its
 last-good snapshot, then fail over to retrieval-off for the tick.
+
+Mutable stores (core/mutable.py) attach directly: the server serves one
+installed epoch per view, runs cooperative compaction + flush + periodic
+``audit()`` in ``_after_tick``, and admits online ``submit_append``/
+``submit_delete`` with shed-on-backpressure when compaction falls behind
+(``mutations_shed``/``pending_mutations`` in ``stats()``).
 """
 from __future__ import annotations
 
@@ -134,10 +140,24 @@ class Server:
                  fault_injector: Optional[faults_mod.FaultInjector] = None,
                  search_retries: int = 2, retry_backoff_s: float = 1e-3,
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every: Optional[int] = None):
+                 snapshot_every: Optional[int] = None,
+                 audit_every: Optional[int] = None,
+                 mutate_flush_every: int = 4):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.max_batch, self.max_len = max_batch, max_len
+        # a MutableStore (core/mutable.py) serves through its installed
+        # epoch: ``self.store`` is always a plain DataStore VIEW of one
+        # epoch (refreshed in _after_tick when a newer epoch installs), so
+        # the decode path never observes a half-mutated arena
+        self.mstore = None
+        self._store_epoch = -1
+        if store is not None and hasattr(store, "datastore_view"):
+            self.mstore = store
+            store = store.datastore_view()
+            self._store_epoch = self.mstore.epoch_seq
         self.store = store
+        self.audit_every = audit_every
+        self.mutate_flush_every = mutate_flush_every
         self.with_retrieval = cfg.retrieval.enabled and store is not None
         self.max_queue = max_queue
         self.default_deadline_ticks = default_deadline_ticks
@@ -181,9 +201,11 @@ class Server:
         self.tick_s: List[float] = []
         self.token_lat_s: List[float] = []
         self.queue_wait_ticks: List[int] = []
-        if self.with_retrieval and snapshot_dir is not None:
+        if (self.with_retrieval and snapshot_dir is not None
+                and self.mstore is None):
             # last-good snapshot baseline: written before serving starts,
             # so a corrupted store always has something to fall back to
+            # (a MutableStore snapshots into its own root at create time)
             ckpt.save(snapshot_dir, 0, self.store, blocking=True)
             self.counters["snapshot_saves"] += 1
 
@@ -284,6 +306,12 @@ class Server:
         return self._step(token, active, self.rungs[self.rung])
 
     def _restore_store_snapshot(self) -> bool:
+        if self.mstore is not None:
+            # an installed epoch is immutable — there is no mid-process
+            # corruption to roll back; durability lives in the store's own
+            # WAL + snapshots and is exercised by process-level recovery
+            # (MutableStore.recover), not the serve loop
+            return False
         inj = self.faults
 
         def load():
@@ -306,6 +334,15 @@ class Server:
         return True
 
     def _save_store_snapshot(self):
+        if self.mstore is not None:
+            if self.mstore.root is None:
+                return
+            try:
+                self.mstore.snapshot()
+                self.counters["snapshot_saves"] += 1
+            except faults_mod.TRANSIENT:
+                self.counters["snapshot_save_failures"] += 1
+            return
         hook = self.faults.hook("ckpt_save") if self.faults else None
         try:
             ckpt.save(self.snapshot_dir, self.ticks, self.store,
@@ -315,6 +352,68 @@ class Server:
             ckpt.garbage_collect(self.snapshot_dir, keep=2)
         except faults_mod.TRANSIENT:
             self.counters["snapshot_save_failures"] += 1
+
+    # -- mutation admission (mutable stores) --------------------------------
+
+    def submit_append(self, codes, values=None) -> bool:
+        """Admit an online append to the mutable store. SHED (False) when
+        compaction has fallen behind — the store's acked-durable backlog
+        is bounded, so admission backpressure is the only honest answer
+        (surfaced as ``mutations_shed`` in stats()). False also means NOT
+        acknowledged: a WAL fault before the fsync sheds rather than acks.
+        """
+        assert self.mstore is not None, "no mutable store attached"
+        n = int(np.atleast_2d(np.asarray(codes)).shape[0])
+        if self.mstore.backlog_full:
+            self.counters["mutations_shed"] += n
+            return False
+        try:
+            self.mstore.append(codes, values=values)
+        except faults_mod.TRANSIENT:
+            self.counters["mutation_failures"] += 1
+            return False
+        self.counters["mutations_applied"] += n
+        return True
+
+    def submit_delete(self, ids) -> bool:
+        assert self.mstore is not None, "no mutable store attached"
+        n = int(np.atleast_1d(np.asarray(ids)).shape[0])
+        if self.mstore.backlog_full:
+            self.counters["mutations_shed"] += n
+            return False
+        try:
+            self.mstore.delete(ids)
+        except faults_mod.TRANSIENT:
+            self.counters["mutation_failures"] += 1
+            return False
+        self.counters["mutations_applied"] += n
+        return True
+
+    def _store_maintenance(self):
+        """Per-tick mutable-store lifecycle: cooperative compaction, epoch
+        install for pending mutations, view refresh, periodic audit. Every
+        step is fault-guarded — an injected crash retries next tick."""
+        m = self.mstore
+        try:
+            if m.maybe_compact():
+                self.counters["compactions"] += 1
+        except faults_mod.TRANSIENT:
+            self.counters["compact_failures"] += 1
+        if (m.pending_mutations
+                and self.ticks % self.mutate_flush_every == 0):
+            try:
+                m.flush()
+            except faults_mod.TRANSIENT:
+                self.counters["flush_failures"] += 1
+        if m.epoch_seq != self._store_epoch:
+            self._store_epoch = m.epoch_seq
+            self.store = m.datastore_view()
+        if self.audit_every and self.ticks % self.audit_every == 0:
+            self.counters["audits"] += 1
+            report = m.audit(strict=False)
+            if not report["ok"]:
+                self.counters["audit_failures"] += 1
+                log.error("store audit FAILED: %s", report["problems"])
 
     # -- admission / eviction ---------------------------------------------
 
@@ -437,6 +536,8 @@ class Server:
             self.tick_s.append(dt)
             if self.rung > 0:
                 self.counters["degraded_ticks"] += 1
+        if self.mstore is not None:
+            self._store_maintenance()
         if self.policy is not None and len(self.rungs) > 1:
             new = self.policy.update(self.rung, len(self.rungs),
                                      len(self.waiting), dt)
@@ -500,4 +601,17 @@ class Server:
             "p99_queue_ticks": pct(self.queue_wait_ticks, 99),
             "mean_tick_s": float(np.mean(self.tick_s)) if self.tick_s else 0.0,
             "rung": self.rungs[self.rung].name,
+            # mutable-store surface (zeros for static stores)
+            "mutations_applied": c["mutations_applied"],
+            "mutations_shed": c["mutations_shed"],
+            "mutation_failures": c["mutation_failures"],
+            "pending_mutations": (self.mstore.pending_mutations
+                                  if self.mstore is not None else 0),
+            "store_epoch": (self.mstore.epoch_seq
+                            if self.mstore is not None else -1),
+            "compactions": c["compactions"],
+            "compact_failures": c["compact_failures"],
+            "flush_failures": c["flush_failures"],
+            "audits": c["audits"],
+            "audit_failures": c["audit_failures"],
         }

@@ -88,3 +88,79 @@ def test_restore_fault_hook_seam(tmp_path):
                          seed=0, p={"ckpt_restore": 1.0}).hook("ckpt_restore"))
     # the data itself is untouched by a failed read
     assert (ckpt.restore(root, 1, _tree(0.0))["a"] == _tree(1.0)["a"]).all()
+
+
+# ---------------------------------------------------------------------------
+# restore verification: a committed-but-damaged newest step must fall back
+# to the previous COMMITTED step instead of crashing or returning garbage
+# ---------------------------------------------------------------------------
+
+def _truncate_leaves(root, step, nbytes=200):
+    path = os.path.join(root, f"step_{step:08d}", "proc_0.npz")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(0, size - nbytes))
+
+
+def test_truncated_leaf_raises_corrupt_and_falls_back(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 1, _tree(1.0), blocking=True)
+    ckpt.save(root, 2, _tree(2.0), blocking=True)
+    _truncate_leaves(root, 2)           # step 2 is COMMITTED but damaged
+
+    # direct restore of the damaged step refuses to return garbage
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.restore(root, 2, _tree(0.0))
+    # restore_latest silently falls back to the intact previous step
+    step, tree = ckpt.restore_latest(root, _tree(0.0))
+    assert step == 1
+    assert (tree["a"] == _tree(1.0)["a"]).all()
+    assert (tree["b"]["c"] == _tree(1.0)["b"]["c"]).all()
+
+
+def test_leaf_count_mismatch_detected(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 1, _tree(1.0), blocking=True)
+    # a caller expecting a DIFFERENT structure must get a verification
+    # error, not a silent partial unflatten
+    with pytest.raises(ckpt.CheckpointCorrupt, match="leaves"):
+        ckpt.restore(root, 1, {"a": np.zeros(6, np.float32)})
+
+
+def test_shape_drift_detected(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 1, _tree(1.0), blocking=True)
+    sdir = os.path.join(root, "step_00000001")
+    import json
+    meta = json.load(open(os.path.join(sdir, "meta.json")))
+    meta["leaves"][0]["shape"] = [7]    # drift: meta no longer matches
+    json.dump(meta, open(os.path.join(sdir, "meta.json"), "w"))
+    with pytest.raises(ckpt.CheckpointCorrupt, match="leaf 0"):
+        ckpt.restore(root, 1, _tree(0.0))
+
+
+def test_restore_latest_arrays_fallback_and_shapes(tmp_path):
+    root = str(tmp_path)
+    # shape-changing state across steps (the mutable-store arena case:
+    # no `like` template can exist ahead of the load)
+    ckpt.save(root, 1, [np.arange(4, dtype=np.int64)], blocking=True)
+    ckpt.save(root, 2, [np.arange(9, dtype=np.int64)], blocking=True)
+    step, leaves = ckpt.restore_latest_arrays(root)
+    assert step == 2 and len(leaves) == 1 and leaves[0].shape == (9,)
+
+    _truncate_leaves(root, 2, nbytes=50)
+    step, leaves = ckpt.restore_latest_arrays(root)
+    assert step == 1 and (leaves[0] == np.arange(4)).all()
+
+    _truncate_leaves(root, 1, nbytes=50)
+    assert ckpt.restore_latest_arrays(root) == (None, None)
+
+
+def test_unreadable_meta_json_falls_back(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 1, _tree(1.0), blocking=True)
+    ckpt.save(root, 2, _tree(2.0), blocking=True)
+    with open(os.path.join(root, "step_00000002", "meta.json"), "w") as f:
+        f.write("{ not json")
+    step, tree = ckpt.restore_latest(root, _tree(0.0))
+    assert step == 1 and (tree["a"] == _tree(1.0)["a"]).all()

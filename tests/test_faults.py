@@ -1,0 +1,85 @@
+"""retry_call backoff contract: full-jitter draws stay inside the capped
+exponential envelope, the legacy deterministic mode still doubles (now
+capped), and the max-delay cap actually binds. Sleeps are captured, never
+slept."""
+import numpy as np
+import pytest
+
+from repro.runtime import faults as faults_mod
+
+
+def _failing(n_failures):
+    state = {"calls": 0}
+
+    def fn():
+        state["calls"] += 1
+        if state["calls"] <= n_failures:
+            raise faults_mod.InjectedFault("unit")
+        return "ok"
+
+    return fn, state
+
+
+def test_full_jitter_delays_stay_inside_capped_envelope():
+    base, cap, retries = 1e-3, 0.05, 12
+    slept = []
+    out = faults_mod.retry_call(
+        _failing(retries)[0], retries=retries, backoff_s=base,
+        max_backoff_s=cap, sleep=slept.append, rng=0)
+    assert out == "ok" and len(slept) == retries
+    for i, s in enumerate(slept):
+        hi = min(cap, base * 2 ** i)
+        assert 0.0 <= s <= hi, (i, s, hi)
+    # the envelope is genuinely random, not the deterministic ladder
+    ladder = [min(cap, base * 2 ** i) for i in range(retries)]
+    assert slept != ladder
+    # late attempts are capped strictly below the uncapped exponential
+    assert max(slept) <= cap < base * 2 ** (retries - 1)
+
+
+def test_full_jitter_is_seeded_and_reproducible():
+    kw = dict(retries=5, backoff_s=1e-3, max_backoff_s=0.05)
+    runs = []
+    for _ in range(2):
+        slept = []
+        faults_mod.retry_call(_failing(5)[0], sleep=slept.append, rng=7,
+                              **kw)
+        runs.append(slept)
+    assert runs[0] == runs[1]
+    # a Generator works as the rng too
+    slept = []
+    faults_mod.retry_call(_failing(5)[0], sleep=slept.append,
+                          rng=np.random.default_rng(7), **kw)
+    assert slept == runs[0]
+
+
+def test_jitter_none_keeps_legacy_doubling_with_cap():
+    base, cap, retries = 1e-3, 4e-3, 5
+    slept = []
+    faults_mod.retry_call(_failing(retries)[0], retries=retries,
+                          backoff_s=base, max_backoff_s=cap,
+                          sleep=slept.append, jitter="none")
+    # deterministic doubling, clamped at the cap from the first hit on
+    assert slept == [1e-3, 2e-3, 4e-3, 4e-3, 4e-3]
+
+
+def test_cap_binds_even_when_base_exceeds_it():
+    slept = []
+    faults_mod.retry_call(_failing(3)[0], retries=3, backoff_s=1.0,
+                          max_backoff_s=2e-3, sleep=slept.append,
+                          jitter="none")
+    assert slept == [2e-3, 2e-3, 2e-3]
+
+
+def test_last_error_reraises_after_exhaustion():
+    fn, state = _failing(10)
+    slept = []
+    with pytest.raises(faults_mod.InjectedFault):
+        faults_mod.retry_call(fn, retries=2, backoff_s=1e-4,
+                              sleep=slept.append, rng=0)
+    assert state["calls"] == 3 and len(slept) == 2
+
+
+def test_invalid_jitter_mode_rejected():
+    with pytest.raises(AssertionError):
+        faults_mod.retry_call(lambda: "ok", jitter="half")

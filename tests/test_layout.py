@@ -333,3 +333,97 @@ def test_position_mask_from_inv_matches_layout_mask():
     b = layout.position_block_mask_from_inv(
         layout.invert_permutation(lay.perm), cand, 8, 128, 1, 8)
     assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# arena / mutable-epoch edge cases (empty buckets, n_valid=0 tails,
+# all-tombstoned buckets) — the fused+masked paths must stay bit-identical
+# to the reference even when buckets vanish
+# ---------------------------------------------------------------------------
+
+def test_build_arena_empty_input_and_empty_buckets():
+    # zero rows: a valid arena whose every bucket is pure slack
+    a0 = layout.build_arena(np.zeros((0, 2), np.uint32), 64,
+                            ids=np.zeros(0, np.int64), n_buckets=4)
+    assert a0.n_live == 0 and a0.n_buckets == 4
+    assert a0.capacity == int(np.diff(a0.cap_starts).sum())
+    assert (a0.ids == -1).all() and (a0.n_used == 0).all()
+
+    # all rows identical -> one bucket holds everything, the rest are
+    # empty but still reserve min_slack capacity for future appends
+    codes = np.zeros((32, 2), np.uint32)
+    a = layout.build_arena(codes, 64, ids=np.arange(32, dtype=np.int64),
+                           n_buckets=8, slack_frac=0.5, min_slack=4)
+    key = int(layout.hamming_key_host(codes[:1], a.positions)[0])
+    assert int(a.n_used[key]) == 32 and int(a.n_used.sum()) == 32
+    assert (np.diff(a.cap_starts) >= 4).all()
+    # the occupied segment is exactly the input, in input (id) order
+    s = int(a.cap_starts[key])
+    assert (a.ids[s:s + 32] == np.arange(32)).all()
+    assert (a.codes[s:s + 32] == codes).all()
+
+
+def test_arena_skewed_build_matches_dense_layout_scan():
+    """An arena epoch with EMPTY buckets (skewed keys) searched fused must
+    equal the plain unbucketed fused scan bit-for-bit at k=n (ties
+    exhausted), n chosen so the padded tail gives the kernels an
+    n_valid=0-style all-pad block to mask."""
+    from repro.core import mutable
+    rng = np.random.default_rng(40)
+    d, n = 64, 210          # not a multiple of any block shape
+    xb = rng.integers(0, 2, (n, d)).astype(np.uint8)
+    qb = rng.integers(0, 2, (4, d)).astype(np.uint8)
+    xp = np.asarray(binary.pack_bits(jnp.asarray(xb)))
+    # 16 buckets over 210 uniform rows: some buckets come out tiny; the
+    # padded grid tail past row 210 is an all-pad block the kernels must
+    # mask via the n_valid contract
+    st = mutable.MutableStore.create(xp, d, n_buckets=16)
+    ep = st.flush()
+    counts = np.diff(np.asarray(ep.layout.starts))
+    assert counts.min() < counts.max()      # genuinely skewed buckets
+    qp = binary.pack_bits(jnp.asarray(qb))
+    ld, li = engine.KNNEngine.from_epoch(ep, d).search(qp, n)
+    ad, ai = engine.KNNEngine(codes=ep.layout.codes, d=d).search(qp, n)
+    key = ld * (n + 1) + jnp.asarray(ep.store_ids)[li]
+    key_ref = ad * (n + 1) + jnp.asarray(ep.store_ids)[ai]
+    assert (jnp.sort(key, -1) == jnp.sort(key_ref, -1)).all()
+
+
+def test_all_tombstoned_bucket_masked_probe_bit_identical():
+    """Delete EVERY row of one bucket: the installed epoch has a genuinely
+    empty bucket (starts[b] == starts[b+1]); masked probes that include it
+    stay bit-identical to the gather reference, and probing ONLY it yields
+    pure sentinels."""
+    from repro.core import mutable
+    rng = np.random.default_rng(41)
+    d, n, q, k = 64, 512, 4, 6
+    xb = rng.integers(0, 2, (n, d)).astype(np.uint8)
+    xp = np.asarray(binary.pack_bits(jnp.asarray(xb)))
+    # tombstone_frac=1.0 suppresses auto-compaction so the empty bucket
+    # SURVIVES into the epoch instead of being re-clustered away
+    st = mutable.MutableStore.create(xp, d, n_buckets=8, tombstone_frac=1.0)
+    a = st.arena
+    victim = int(np.argmax(a.n_used))
+    s = int(a.cap_starts[victim])
+    doomed = np.sort(a.ids[s:s + int(a.n_used[victim])])
+    assert doomed.size > 0
+    st.delete(doomed)
+    ep = st.flush()
+    starts = np.asarray(ep.layout.starts)
+    assert starts[victim] == starts[victim + 1], "bucket must be empty"
+    assert ep.n == n - doomed.size
+    st.audit()
+
+    qb = rng.integers(0, 2, (q, d)).astype(np.uint8)
+    qp = binary.pack_bits(jnp.asarray(qb))
+    aq, _ = layout.hamming_prefix_assign(qp, d, 3,
+                                         jnp.asarray(a.positions))
+    # probe mix: the query's own bucket + the tombstoned one
+    probe = jnp.stack([aq, jnp.full_like(aq, victim)], axis=1)
+    md, mi = layout.masked_topk(ep.layout, qp, k, d, probe=probe)
+    rd, ri = _mask_reference(ep.layout, qp, probe, k, d)
+    assert (md == rd).all() and (mi == ri).all()
+    # probing only the dead bucket: sentinel rows, no phantom hits
+    dead = jnp.full((q, 1), victim, jnp.int32)
+    dd, di = layout.masked_topk(ep.layout, qp, k, d, probe=dead)
+    assert (dd == d + 1).all() and (di == -1).all()

@@ -1,0 +1,374 @@
+"""Crash-safe mutable datastore (core/mutable.py): bit-identity of a
+churned store to a from-scratch rebuild, crash-at-every-fault-site
+recovery with zero acked-mutation loss, torn-WAL tolerance, epoch
+pinning, slack/tombstone lifecycle, audit detection, and the server's
+online mutation admission."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import wal as wal_mod
+from repro.core import layout as layout_mod
+from repro.core import mutable
+from repro.runtime import faults as faults_mod
+
+D = 64
+W = 2
+
+
+def _codes(rng, n):
+    return rng.integers(0, 2 ** 32, size=(n, W), dtype=np.uint32)
+
+
+def _mk(rng, n=192, root=None, inj=None, **kw):
+    codes = _codes(rng, n)
+    st = mutable.MutableStore.create(
+        codes, D, values=np.arange(n, dtype=np.int32), root=root,
+        fault_injector=inj, **kw)
+    return st, codes
+
+
+def _logical(st):
+    """(ids, codes, values) of the installed epoch as host arrays."""
+    ep = st.epoch
+    return (np.asarray(ep.store_ids), np.asarray(ep.layout.codes),
+            np.asarray(ep.values))
+
+
+def _churn(st, rng, rounds=3, app=24, dele=10):
+    """Deterministic append/delete mix; returns the id->(code,value) model."""
+    model = {int(i): (np.asarray(st.arena.codes[st._id_map[int(i)]]).copy(),
+                      int(st.arena.values[st._id_map[int(i)]]))
+             for i in st._id_map}
+    for _ in range(rounds):
+        c = _codes(rng, app)
+        v = rng.integers(0, 1 << 20, app).astype(np.int32)
+        ids = st.append(c, values=v)
+        for j, ext in enumerate(ids):
+            model[int(ext)] = (c[j], int(v[j]))
+        victims = sorted(int(x) for x in rng.choice(
+            np.fromiter(model, np.int64), dele, replace=False))
+        st.delete(np.asarray(victims, np.int64))
+        for x in victims:
+            del model[x]
+    return model
+
+
+def _assert_matches_model(st, model):
+    ids, codes, values = _logical(st)
+    assert set(int(i) for i in ids) == set(model)
+    for i in range(ids.shape[0]):
+        code, val = model[int(ids[i])]
+        assert np.array_equal(codes[i], code)
+        assert int(values[i]) == val
+
+
+# ---------------------------------------------------------------------------
+# bit-identity to a from-scratch rebuild (the central invariant)
+# ---------------------------------------------------------------------------
+
+def test_bit_identity_to_rebuild_after_churn():
+    rng = np.random.default_rng(0)
+    st, _ = _mk(rng)
+    model = _churn(st, rng)
+    st.compact()
+    ep = st.flush()
+
+    live = sorted(model)
+    ref = mutable.MutableStore(layout_mod.build_arena(
+        np.stack([model[i][0] for i in live]), D,
+        ids=np.asarray(live, np.int64),
+        values=np.asarray([model[i][1] for i in live], np.int32),
+        positions=st.arena.positions))
+    ep_ref = ref.flush()
+
+    # the mutated store's epoch IS the rebuild, bit for bit
+    assert np.array_equal(np.asarray(ep.layout.codes),
+                          np.asarray(ep_ref.layout.codes))
+    assert np.array_equal(np.asarray(ep.store_ids),
+                          np.asarray(ep_ref.store_ids))
+    assert np.array_equal(np.asarray(ep.values), np.asarray(ep_ref.values))
+    assert np.array_equal(np.asarray(ep.layout.starts),
+                          np.asarray(ep_ref.layout.starts))
+    # and so are its search results (dists AND ids)
+    q = _codes(rng, 8)
+    d1, i1 = st.search(q, k=9)
+    d2, i2 = ref.search(q, k=9)
+    assert np.array_equal(d1, d2) and np.array_equal(i1, i2)
+    st.audit()
+    ref.audit()
+
+
+def test_epoch_pinning_and_flush_visibility():
+    rng = np.random.default_rng(1)
+    st, codes0 = _mk(rng, n=64)
+    ep1 = st.epoch
+    ids_new = st.append(_codes(rng, 8))
+    st.delete(np.asarray([0, 1], np.int64))
+    # mutations are NOT visible until flush: the installed epoch is the
+    # same immutable object a reader may have pinned mid-search
+    assert st.epoch is ep1
+    _, ext = st.search(_codes(rng, 2), k=4)
+    assert all(int(e) < 64 for e in ext.ravel() if int(e) >= 0)
+
+    ep2 = st.flush()
+    assert ep2 is not ep1 and ep2.seq == ep1.seq + 1
+    assert ep2.n == 64 + 8 - 2
+    assert set(int(i) for i in ids_new) <= set(int(i) for i in ep2.store_ids)
+    # the pinned epoch is untouched — its checksum still verifies
+    got = mutable._epoch_checksum(
+        np.asarray(ep1.layout.codes), ep1.store_ids,
+        np.asarray(ep1.values), np.asarray(ep1.layout.starts))
+    assert got == ep1.checksum and ep1.n == 64
+
+
+# ---------------------------------------------------------------------------
+# slack / tombstone lifecycle
+# ---------------------------------------------------------------------------
+
+def test_slack_exhaustion_overflows_then_flush_folds():
+    rng = np.random.default_rng(2)
+    # zero slack: every append must defer to the compaction backlog
+    st, _ = _mk(rng, n=64, slack_frac=0.0, min_slack=0, max_pending=16)
+    assert st.arena.capacity == 64
+    st.append(_codes(rng, 12))
+    assert len(st._overflow) == 12 and st.needs_compact
+    assert st.pending_mutations >= 12 and not st.backlog_full
+    st.append(_codes(rng, 8))
+    assert st.backlog_full          # >= max_pending: admission must shed
+    ep = st.flush()                 # folds the backlog via compaction
+    assert st.n_live == 84 and not st._overflow and not st.backlog_full
+    assert ep.n == 84
+    st.audit()
+
+
+def test_tombstone_threshold_triggers_compaction():
+    rng = np.random.default_rng(3)
+    st, _ = _mk(rng, n=100, tombstone_frac=0.1)
+    st.delete(np.arange(0, 30, dtype=np.int64))
+    assert st.arena.n_tombstones == 30 and st.needs_compact
+    assert st.maybe_compact() and not st.maybe_compact()
+    assert st.arena.n_tombstones == 0 and st.n_live == 70
+    assert st.counters["compactions"] == 1
+    st.flush()
+    st.audit()
+
+
+# ---------------------------------------------------------------------------
+# crash at each fault site -> recovery loses no acked mutation
+# ---------------------------------------------------------------------------
+
+def _crash_env(tmp_path, seed):
+    rng = np.random.default_rng(seed)
+    inj = faults_mod.FaultInjector(seed=seed, p={})
+    st, codes0 = _mk(rng, n=96, root=str(tmp_path), inj=inj)
+    model = {int(i): (codes0[i], i) for i in range(96)}
+    return rng, inj, st, model
+
+
+def test_crash_at_wal_append_mutation_never_acked(tmp_path):
+    rng, inj, st, model = _crash_env(tmp_path, 10)
+    inj.p["wal_append"] = 1.0
+    with pytest.raises(faults_mod.InjectedFault):
+        st.append(_codes(rng, 4))
+    with pytest.raises(faults_mod.InjectedFault):
+        st.delete(np.asarray([0], np.int64))
+    st.close()
+    rec = mutable.MutableStore.recover(str(tmp_path))
+    # the fault fires BEFORE the record is written: nothing lost, nothing
+    # phantom — recovered state is exactly the pre-crash acked state
+    _assert_matches_model(rec, model)
+    rec.close()
+
+
+def test_crash_at_epoch_install_keeps_acked_appends(tmp_path):
+    rng, inj, st, model = _crash_env(tmp_path, 11)
+    c = _codes(rng, 6)
+    ids = st.append(c)                    # acked + durable
+    for j, ext in enumerate(ids):
+        model[int(ext)] = (c[j], 0)
+    ep_before = st.epoch
+    inj.p["epoch_install"] = 1.0
+    with pytest.raises(faults_mod.InjectedFault):
+        st.flush()
+    assert st.epoch is ep_before          # old epoch still serves
+    st.close()
+    rec = mutable.MutableStore.recover(str(tmp_path))
+    _assert_matches_model(rec, model)     # the acked appends survived
+    rec.close()
+
+
+def test_crash_at_compact_build_keeps_acked_deletes(tmp_path):
+    rng, inj, st, model = _crash_env(tmp_path, 12)
+    victims = np.arange(0, 40, dtype=np.int64)
+    st.delete(victims)                    # acked + durable
+    for v in victims:
+        del model[int(v)]
+    inj.p["compact_build"] = 1.0
+    with pytest.raises(faults_mod.InjectedFault):
+        st.compact()
+    st.audit()                            # old arena left fully intact
+    st.close()
+    rec = mutable.MutableStore.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+    rec.close()
+
+
+def test_torn_wal_tail_drops_exactly_the_torn_record(tmp_path):
+    rng = np.random.default_rng(13)
+    st, codes0 = _mk(rng, n=48, root=str(tmp_path))
+    model = {int(i): (codes0[i], i) for i in range(48)}
+    c1 = _codes(rng, 4)
+    for j, ext in enumerate(st.append(c1)):
+        model[int(ext)] = (c1[j], 0)
+    st.append(_codes(rng, 4))             # this record will be torn
+    st.close()
+    # tear the last record mid-payload: on a real crash the fsync never
+    # returned, so the mutation was never acknowledged
+    size = os.path.getsize(st.wal_path)
+    with open(st.wal_path, "r+b") as f:
+        f.truncate(size - 7)
+    rec = mutable.MutableStore.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+    # strict WAL iteration still flags the torn tail as corruption
+    with pytest.raises(wal_mod.WalCorrupt):
+        list(wal_mod.iter_records(st.wal_path, strict=True))
+    rec.close()
+
+
+def test_recovery_is_idempotent(tmp_path):
+    rng = np.random.default_rng(14)
+    st, _ = _mk(rng, n=96, root=str(tmp_path))
+    model = _churn(st, rng, rounds=2)
+    st.close()
+    rec1 = mutable.MutableStore.recover(str(tmp_path))
+    state1 = _logical(rec1)
+    rec1.close()
+    rec2 = mutable.MutableStore.recover(str(tmp_path))
+    state2 = _logical(rec2)
+    for a, b in zip(state1, state2):
+        assert np.array_equal(a, b)
+    _assert_matches_model(rec2, model)
+    rec2.close()
+
+
+def test_snapshot_truncates_wal_and_covers_recovery(tmp_path):
+    rng = np.random.default_rng(15)
+    st, codes0 = _mk(rng, n=48, root=str(tmp_path))
+    model = {int(i): (codes0[i], i) for i in range(48)}
+    c1 = _codes(rng, 6)
+    for j, ext in enumerate(st.append(c1)):
+        model[int(ext)] = (c1[j], 0)
+    st.snapshot()
+    # everything acked so far is snapshot-covered: the WAL is empty again
+    assert wal_mod.last_seq(st.wal_path) == -1
+    c2 = _codes(rng, 5)                   # lands in the post-snapshot WAL
+    for j, ext in enumerate(st.append(c2)):
+        model[int(ext)] = (c2[j], 0)
+    st.close()
+    rec = mutable.MutableStore.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# audit detects real corruption
+# ---------------------------------------------------------------------------
+
+def test_audit_detects_duplicate_live_ids():
+    rng = np.random.default_rng(16)
+    st, _ = _mk(rng, n=64)
+    slots = sorted(st._id_map.values())[:2]
+    st.arena.ids[slots[1]] = st.arena.ids[slots[0]]   # scribble a dup
+    report = st.audit(strict=False)
+    assert not report["ok"]
+    with pytest.raises(mutable.AuditError):
+        st.audit()
+
+
+def test_audit_detects_epoch_checksum_mismatch():
+    rng = np.random.default_rng(17)
+    st, _ = _mk(rng, n=64)
+    ep = st.flush()
+    st._epoch = ep._replace(checksum=ep.checksum ^ 1)
+    with pytest.raises(mutable.AuditError, match="checksum"):
+        st.audit()
+
+
+# ---------------------------------------------------------------------------
+# server integration: admission, view refresh, periodic audit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_env():
+    from repro import compat
+    from repro.configs import get_config, scaled_down
+    from repro.core import retrieval
+    from repro.models import lm
+    cfg = scaled_down(get_config("gemma-2b"), d_model=64, d_ff=128,
+                      vocab_size=256)
+    cfg = dataclasses.replace(cfg, retrieval=dataclasses.replace(
+        cfg.retrieval, datastore_size=128, code_bits=64, k=8,
+        chunk_size=128))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ds = retrieval.synthetic_datastore(cfg)
+    return cfg, mesh, params, ds
+
+
+def _mstore_from(ds, **kw):
+    return mutable.MutableStore.create(
+        np.asarray(ds.codes), D, values=np.asarray(ds.values), itq=ds.itq,
+        **kw)
+
+
+def test_server_mutations_refresh_view_and_audit(serve_env):
+    from repro.runtime import server as server_mod
+    cfg, mesh, params, ds = serve_env
+    rng = np.random.default_rng(20)
+    mstore = _mstore_from(ds)
+    srv = server_mod.Server(cfg, mesh, params, max_batch=2, max_len=16,
+                            store=mstore, audit_every=3,
+                            mutate_flush_every=2)
+    assert srv.mstore is mstore
+    epoch0 = srv.stats()["store_epoch"]
+    assert srv.submit_append(_codes(rng, 4))
+    assert srv.submit_delete(np.asarray([0, 1], np.int64))
+    srv.submit(server_mod.Request(
+        uid=0, prompt=np.asarray([1, 2], np.int32), max_new_tokens=4))
+    for _ in range(8):
+        srv.tick()
+    while srv.has_work and srv.ticks < 40:
+        srv.tick()
+    s = srv.stats()
+    assert s["mutations_applied"] == 6 and s["mutations_shed"] == 0
+    # maintenance flushed the pending mutations and refreshed the view
+    assert s["store_epoch"] > epoch0 and s["pending_mutations"] == 0
+    assert srv.store.codes.shape[0] == mstore.n_live
+    assert srv.store.key_positions is not None
+    # periodic audits ran and all passed
+    assert s["audits"] >= 2 and s["audit_failures"] == 0
+    assert s["done"] == 1 and s["lost"] == 0
+
+
+def test_server_sheds_appends_when_backlog_full(serve_env):
+    from repro.runtime import server as server_mod
+    cfg, mesh, params, ds = serve_env
+    rng = np.random.default_rng(21)
+    # zero slack + tiny backlog: appends overflow immediately and the
+    # server must shed rather than grow the backlog unboundedly
+    mstore = _mstore_from(ds, slack_frac=0.0, min_slack=0, max_pending=8)
+    srv = server_mod.Server(cfg, mesh, params, max_batch=2, max_len=16,
+                            store=mstore)
+    assert srv.submit_append(_codes(rng, 8))      # fills the backlog
+    assert mstore.backlog_full
+    assert not srv.submit_append(_codes(rng, 4))  # shed, NOT acked
+    s = srv.stats()
+    assert s["mutations_applied"] == 8 and s["mutations_shed"] == 4
+    srv.tick()          # maintenance compacts the backlog away
+    assert not mstore.backlog_full
+    assert srv.submit_append(_codes(rng, 2))      # admission reopens
