@@ -1,0 +1,367 @@
+"""Mixed-tenant churn + fault soak over the packed tenant arena
+(core/tenant.py), plus a packed-batch vs per-tenant search latency pair.
+
+N tenants with skewed sizes share one ``TenantArena`` (disjoint external
+id ranges so cross-tenant leakage is detectable). The soak drives a mix
+of append/delete/search/maintain/snapshot ops with base-rate faults armed
+at the store sites; any fault that escapes containment (a mutation crash)
+abandons the whole in-memory arena and re-runs ``TenantArena.recover``.
+Midway, ONE tenant is deliberately poisoned: an interior record of its
+WAL is bit-flipped while the arena is closed — recovery must quarantine
+exactly that tenant and bring every other tenant up with zero
+acked-mutation loss, zero phantoms, and zero unavailability.
+
+Standalone CLI (what CI's tenant-soak-smoke job runs):
+    PYTHONPATH=src python benchmarks/bench_tenant.py \
+        --ops 400 --tenants 4 --fault-p 0.02 --json BENCH_tenant.json
+Exit code is non-zero if the poisoned tenant fails to quarantine, any
+HEALTHY tenant loses an acked mutation / grows a phantom / becomes
+unavailable, any result crosses tenants, or the packed mixed-tenant batch
+diverges from per-tenant searches — the blast-radius invariants.
+
+Also registered in benchmarks/run.py (tag ``tenant``).
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+ID_STRIDE = 10_000_000          # disjoint per-tenant external id ranges
+
+
+def _mk_codes(rng, n: int, d: int) -> np.ndarray:
+    return rng.integers(0, 2 ** 32, size=(n, d // 32), dtype=np.uint32)
+
+
+def _epoch_model(store):
+    ep = store.epoch
+    ids = np.asarray(ep.store_ids)
+    codes = np.asarray(ep.layout.codes)
+    values = np.asarray(ep.values)
+    return {int(ids[i]): (codes[i].tobytes(), int(values[i]))
+            for i in range(ids.shape[0])}
+
+
+def _reconcile(store, model, in_doubt, report):
+    """Post-recovery ledger check for ONE tenant (see bench_mutate)."""
+    got = _epoch_model(store)
+    if in_doubt is not None:
+        kind, payload = in_doubt
+        if kind == "append":
+            for ext_id, code, val in payload:
+                if ext_id in got:
+                    model[ext_id] = (code, val)
+        elif kind == "delete":
+            for ext_id in payload:
+                if ext_id not in got:
+                    model.pop(ext_id, None)
+    for ext_id, row in model.items():
+        if ext_id not in got:
+            report["lost_acks"] += 1
+        elif got[ext_id] != row:
+            report["corrupt_rows"] += 1
+    for ext_id in got:
+        if ext_id not in model:
+            report["phantoms"] += 1
+    return set(got)
+
+
+def _recover_arena(d, root, inj, bn, store_kw, quotas):
+    """TenantArena.recover already retries transient per-tenant faults
+    bounded (quarantining only on exhaustion), so one call suffices."""
+    from repro.core import tenant as tenant_mod
+    return tenant_mod.TenantArena.recover(
+        d, root, fault_injector=inj, quotas=quotas, bn=bn, **store_kw)
+
+
+def soak(*, ops: int = 400, tenants: int = 4, fault_p: float = 0.02,
+         seed: int = 0, d: int = 64) -> dict:
+    """Run the mixed-tenant soak; ``ok`` is True iff every blast-radius
+    invariant held (poisoned tenant quarantined, healthy tenants lossless
+    and available, packed search bit-identical and tenant-pure)."""
+    from repro.checkpoint import wal as wal_mod
+    from repro.core import tenant as tenant_mod
+    from repro.runtime import faults as faults_mod
+
+    rng = np.random.default_rng(seed)
+    inj = faults_mod.FaultInjector(
+        seed=seed + 1, p={"wal_append": fault_p, "compact_build": fault_p,
+                          "epoch_install": fault_p})
+    store_kw = dict(slack_frac=0.15, min_slack=2, tombstone_frac=0.1,
+                    max_pending=256)
+    # skewed sizes: one big tenant, a long tail of small ones
+    sizes = [max(8, 256 >> (2 * i)) for i in range(tenants)]
+    tids = [f"t{i}" for i in range(tenants)]
+    poison = tids[min(1, tenants - 1)]
+    quotas = {tid: tenant_mod.TenantQuota(max_rows=4 * sizes[i] + 64)
+              for i, tid in enumerate(tids)}
+    report = {"ops": 0, "crashes": 0, "recoveries": 0, "lost_acks": 0,
+              "phantoms": 0, "corrupt_rows": 0, "stale_search_hits": 0,
+              "cross_tenant_hits": 0, "healthy_unavailable": 0,
+              "quarantined_rejections": 0, "maintenance_failures": 0,
+              "appends": 0, "deletes": 0, "searches": 0, "maintains": 0,
+              "snapshots": 0, "sheds": {}, "sizes": dict(zip(tids, sizes)),
+              "poisoned": poison}
+
+    with tempfile.TemporaryDirectory() as root:
+        ar = tenant_mod.TenantArena(
+            d, root=root, bn=64, fault_injector=inj, **store_kw)
+        models, visible = {}, {}
+        for i, tid in enumerate(tids):
+            codes = _mk_codes(rng, sizes[i], d)
+            ids = ID_STRIDE * i + np.arange(sizes[i], dtype=np.int64)
+            ar.create_tenant(tid, codes, ids=ids,
+                             values=np.arange(sizes[i], dtype=np.int32),
+                             quota=quotas[tid])
+            models[tid] = {int(ids[j]): (codes[j].tobytes(), j)
+                           for j in range(sizes[i])}
+            visible[tid] = set(models[tid])
+        poisoned_now = False
+
+        def crash_recover(in_doubt_tid, in_doubt):
+            nonlocal ar
+            report["crashes"] += 1
+            ar.close()
+            ar = _recover_arena(d, root, inj, 64, store_kw, quotas)
+            report["recoveries"] += 1
+            for tid in tids:
+                t = ar.tenant(tid)
+                if t.status != tenant_mod.HEALTHY:
+                    if not (poisoned_now and tid == poison):
+                        report["healthy_unavailable"] += 1
+                    continue
+                _reconcile(t.store, models[tid],
+                           in_doubt if tid == in_doubt_tid else None,
+                           report)
+                visible[tid] = set(_epoch_model(t.store))
+
+        def healthy_pool():
+            return [t for t in tids if not (poisoned_now and t == poison)]
+
+        for step in range(ops):
+            report["ops"] += 1
+            if step == ops // 2 and not poisoned_now:
+                # ---- the poison step: interior WAL corruption ----------
+                saved = dict(inj.p)
+                inj.p.clear()       # the two set-up appends must ack
+                for _ in range(2):
+                    c = _mk_codes(rng, 1, d)
+                    off_before = os.path.getsize(os.path.join(
+                        wal_mod.namespace_root(root, poison), "wal.log"))
+                    ar.append(poison, c)
+                    if _ == 0:
+                        first_rec_off = off_before
+                inj.p.update(saved)
+                ar.close()
+                wal_path = os.path.join(
+                    wal_mod.namespace_root(root, poison), "wal.log")
+                with open(wal_path, "r+b") as f:    # flip a payload bit of
+                    f.seek(first_rec_off + wal_mod._HEADER.size)  # record 1
+                    b = f.read(1)                   # of the final two ->
+                    f.seek(-1, os.SEEK_CUR)         # interior corruption
+                    f.write(bytes([b[0] ^ 0x08]))
+                assert wal_mod.verify(wal_path)["status"] == "corrupt"
+                ar = _recover_arena(d, root, inj, 64, store_kw, quotas)
+                report["recoveries"] += 1
+                assert ar.tenant(poison).status == tenant_mod.QUARANTINED, \
+                    "poisoned tenant failed to quarantine"
+                poisoned_now = True
+                for tid in tids:
+                    if tid == poison:
+                        continue
+                    if ar.tenant(tid).status != tenant_mod.HEALTHY:
+                        report["healthy_unavailable"] += 1
+                        continue
+                    _reconcile(ar.tenant(tid).store, models[tid], None,
+                               report)
+                    visible[tid] = set(_epoch_model(ar.tenant(tid).store))
+                continue
+
+            # occasionally poke the quarantined tenant: it must reject
+            # crisply, never crash the arena or touch its neighbours
+            if poisoned_now and rng.random() < 0.05:
+                try:
+                    ar.append(poison, _mk_codes(rng, 1, d))
+                    report["healthy_unavailable"] += 0  # unreachable ack
+                except tenant_mod.TenantQuarantined:
+                    report["quarantined_rejections"] += 1
+                continue
+
+            tid = str(rng.choice(healthy_pool()))
+            model = models[tid]
+            op = rng.choice(["append", "delete", "search", "maintain",
+                             "snapshot"], p=[0.36, 0.22, 0.20, 0.18, 0.04])
+            in_doubt = None
+            try:
+                if op == "append":
+                    n = int(rng.poisson(2)) + 1
+                    reason = ar.admission_check(tid, n)
+                    if reason is not None:
+                        report["sheds"][reason] = (
+                            report["sheds"].get(reason, 0) + n)
+                        continue
+                    codes = _mk_codes(rng, n, d)
+                    vals = rng.integers(0, 1 << 20, n).astype(np.int32)
+                    nid = ar.tenant(tid).store._next_id
+                    in_doubt = ("append", [
+                        (nid + i, codes[i].tobytes(), int(vals[i]))
+                        for i in range(n)])
+                    ids = ar.append(tid, codes, values=vals)
+                    for i, ext in enumerate(ids):
+                        model[int(ext)] = (codes[i].tobytes(), int(vals[i]))
+                    report["appends"] += n
+                elif op == "delete":
+                    if not model:
+                        continue
+                    n = min(int(rng.poisson(2)) + 1, len(model))
+                    victims = sorted(int(v) for v in rng.choice(
+                        np.fromiter(model, np.int64), n, replace=False))
+                    in_doubt = ("delete", victims)
+                    ar.delete(tid, np.asarray(victims, np.int64))
+                    for v in victims:
+                        del model[v]
+                    report["deletes"] += n
+                elif op == "search":
+                    qs = {t: _mk_codes(rng, 3, d)
+                          for t in ar.healthy_tids()}
+                    res = ar.search(qs, k=8)
+                    for t, (_dd, ee) in res.items():
+                        lo, hi = (ID_STRIDE * tids.index(t),
+                                  ID_STRIDE * (tids.index(t) + 1))
+                        for e in np.asarray(ee).ravel():
+                            e = int(e)
+                            if e < 0:
+                                continue
+                            if not lo <= e < hi:
+                                report["cross_tenant_hits"] += 1
+                            elif e not in visible[t]:
+                                report["stale_search_hits"] += 1
+                    report["searches"] += 1
+                elif op == "maintain":
+                    rep = ar.maintain(compact_budget=2)
+                    report["maintenance_failures"] += len(rep["failed"])
+                    for t in ar.healthy_tids():
+                        if t not in rep["failed"]:
+                            visible[t] = set(models[t])
+                    report["maintains"] += 1
+                elif op == "snapshot":
+                    ar.snapshot()       # per-tenant failures contained
+                    report["snapshots"] += 1
+            except faults_mod.InjectedFault:
+                crash_recover(tid, in_doubt)
+            except tenant_mod.TenantQuarantined:
+                report["healthy_unavailable"] += 1
+
+        # ---- final: cold crash, recover, verify every invariant ----------
+        ar.close()
+        ar = _recover_arena(d, root, None, 64, store_kw, quotas)
+        report["recoveries"] += 1
+        assert poisoned_now
+        report["poison_quarantined"] = (
+            ar.tenant(poison).status == tenant_mod.QUARANTINED)
+        for tid in tids:
+            if tid == poison:
+                continue
+            if ar.tenant(tid).status != tenant_mod.HEALTHY:
+                report["healthy_unavailable"] += 1
+                continue
+            _reconcile(ar.tenant(tid).store, models[tid], None, report)
+
+        # packed mixed-tenant batch vs per-tenant searches: bit-identical,
+        # and timed both ways (the tentpole's one-kernel-launch claim)
+        healthy = ar.healthy_tids()
+        qs = {t: _mk_codes(rng, 8, d) for t in healthy}
+        packed = ar.search(qs, k=8)
+        identical = True
+        for t in healthy:
+            sd, se = ar.tenant(t).store.search(qs[t], k=8)
+            dd, ee = packed[t]
+            identical &= bool(np.array_equal(np.asarray(dd), np.asarray(sd))
+                              and np.array_equal(np.asarray(ee),
+                                                 np.asarray(se)))
+        report["bit_identical"] = identical
+
+        def _t(fn, iters=5):
+            fn()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn()
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        report["us_packed_batch"] = _t(lambda: ar.search(qs, k=8))
+        report["us_per_tenant_calls"] = _t(
+            lambda: [ar.tenant(t).store.search(qs[t], k=8)
+                     for t in healthy])
+        report["n_healthy"] = len(healthy)
+        report["fired"] = dict(inj.fired)
+        report["arena"] = {k: v for k, v in ar.stats().items()
+                          if k != "tenants"}
+        ar.close()
+
+    report["ok"] = (report["poison_quarantined"]
+                    and report["lost_acks"] == 0
+                    and report["phantoms"] == 0
+                    and report["corrupt_rows"] == 0
+                    and report["stale_search_hits"] == 0
+                    and report["cross_tenant_hits"] == 0
+                    and report["healthy_unavailable"] == 0
+                    and report["bit_identical"])
+    return report
+
+
+def run(report):
+    """benchmarks/run.py hook — reduced-scale soak; the invariants must
+    hold even at smoke scale."""
+    s = soak(ops=80, tenants=3, fault_p=0.02, seed=0)
+    assert s["ok"], f"tenant soak invariants broken: {s}"
+    report(f"tenant_soak,{s['us_packed_batch']:.1f},"
+           f"tenants={len(s['sizes'])};crashes={s['crashes']};"
+           f"lost_acks={s['lost_acks']};cross_tenant={s['cross_tenant_hits']};"
+           f"quarantined={s['poisoned']};bit_identical={s['bit_identical']}")
+    report(f"tenant_per_tenant_calls,{s['us_per_tenant_calls']:.1f},"
+           f"n_healthy={s['n_healthy']};k=8;q_per_tenant=8")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", type=int, default=400)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--fault-p", type=float, default=0.02)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_tenant.json-style output to PATH")
+    args = ap.parse_args()
+
+    rep = soak(ops=args.ops, tenants=args.tenants, fault_p=args.fault_p,
+               seed=args.seed, d=args.d)
+    print(f"soak: ops={rep['ops']} crashes={rep['crashes']} "
+          f"recoveries={rep['recoveries']} lost_acks={rep['lost_acks']} "
+          f"phantoms={rep['phantoms']} cross_tenant={rep['cross_tenant_hits']} "
+          f"healthy_unavailable={rep['healthy_unavailable']} "
+          f"poison_quarantined={rep['poison_quarantined']} "
+          f"bit_identical={rep['bit_identical']} "
+          f"us_packed={rep['us_packed_batch']:.1f} "
+          f"us_solo={rep['us_per_tenant_calls']:.1f}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "tenant", "ops": args.ops,
+                       "tenants": args.tenants, "fault_p": args.fault_p,
+                       "seed": args.seed, "soak": rep}, f, indent=1)
+        print(f"wrote soak report to {args.json}", file=sys.stderr)
+    if not rep["ok"]:
+        print("TENANT SOAK FAILED: quarantine missed, a healthy tenant "
+              "lost data or availability, or packing broke bit-identity",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("soak ok: poisoned tenant quarantined, healthy tenants lossless "
+          "and available", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

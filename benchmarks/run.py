@@ -14,8 +14,8 @@ import traceback
 
 from benchmarks import (bench_compounding, bench_energy_proxy, bench_indexing,
                         bench_mutate, bench_packing, bench_serve,
-                        bench_statistical_reduction, bench_throughput,
-                        bench_workloads)
+                        bench_statistical_reduction, bench_tenant,
+                        bench_throughput, bench_workloads)
 
 BENCHES = [
     ("fig4", bench_throughput),
@@ -27,6 +27,7 @@ BENCHES = [
     ("fig15", bench_compounding),
     ("serve", bench_serve),
     ("mutate", bench_mutate),
+    ("tenant", bench_tenant),
 ]
 
 

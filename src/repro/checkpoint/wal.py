@@ -21,6 +21,16 @@ append/delete payloads live with the store that owns their schema.
 ``fault_hook`` runs BEFORE anything is written: an injected fault at the
 ``wal_append`` site means the record never reached the file, the caller
 never acked, and recovery owes the client nothing for it.
+
+Tenant namespaces (core/tenant.py): a multi-tenant arena keeps ONE log
+per tenant under ``<root>/tenants/<tenant>/`` (:func:`namespace_root`,
+:func:`list_namespaces`), so corruption in one tenant's log can never
+poison another's replay — the unit of blast radius is the namespace.
+:func:`verify` triages a log before replay: a *torn tail* (partial final
+record — the normal crash artifact; nothing parseable follows the bad
+frame) recovers normally, while *interior corruption* (a whole valid
+record survives past the bad frame, i.e. tolerant replay would silently
+drop acked records) marks the namespace for quarantine.
 """
 from __future__ import annotations
 
@@ -143,6 +153,83 @@ def last_seq(path: str) -> int:
     for r in iter_records(path):
         seq = max(seq, r.seq)
     return seq
+
+
+def namespace_root(root: str, name: str) -> str:
+    """Filesystem namespace for one tenant's durable state (its own
+    ``wal.log`` + ``snap/``) under a multi-tenant root. Names must be
+    plain path components — a separator would let one tenant alias
+    another's namespace."""
+    name = str(name)
+    assert name and "/" not in name and "\\" not in name \
+        and name not in (".", ".."), f"bad namespace name {name!r}"
+    return os.path.join(root, "tenants", name)
+
+
+def list_namespaces(root: str) -> List[str]:
+    """All tenant namespaces under ``root``, sorted (empty when none)."""
+    base = os.path.join(root, "tenants")
+    if not os.path.isdir(base):
+        return []
+    return sorted(n for n in os.listdir(base)
+                  if os.path.isdir(os.path.join(base, n)))
+
+
+def verify(path: str) -> dict:
+    """Triage a log without replaying it: ``status`` is ``"ok"`` (every
+    byte parses), ``"torn_tail"`` (a bad frame with nothing parseable
+    after it — the normal crash artifact; tolerant replay recovers every
+    whole record), or ``"corrupt"`` (a whole valid record survives PAST
+    the bad frame: tolerant replay would silently drop acked records, so
+    the namespace must be quarantined instead of replayed). Also returns
+    ``records``/``last_seq`` over the clean prefix and ``bad_offset``."""
+    if not os.path.exists(path):
+        return {"status": "ok", "records": 0, "last_seq": -1,
+                "bad_offset": -1}
+    with open(path, "rb") as f:
+        data = f.read()
+    off, n_rec, last = 0, 0, -1
+
+    def _parse_at(pos: int):
+        """(seq, end_offset) of a whole valid record at pos, else None."""
+        if pos + _HEADER.size > len(data):
+            return None
+        magic, seq, kind, plen = _HEADER.unpack_from(data, pos)
+        if magic != MAGIC or plen > MAX_PAYLOAD:
+            return None
+        end = pos + _HEADER.size + plen + _CRC.size
+        if end > len(data):
+            return None
+        crc = zlib.crc32(data[pos + 4:pos + _HEADER.size])
+        crc = zlib.crc32(data[pos + _HEADER.size:end - _CRC.size], crc)
+        if _CRC.unpack_from(data, end - _CRC.size)[0] != crc:
+            return None
+        return seq, end
+
+    while off < len(data):
+        got = _parse_at(off)
+        if got is None:
+            break
+        last, off = got[0], got[1]
+        n_rec += 1
+    if off >= len(data):
+        return {"status": "ok", "records": n_rec, "last_seq": last,
+                "bad_offset": -1}
+    # bad frame at `off`: corruption iff any whole valid record parses
+    # anywhere past it (acked data exists beyond what replay would yield)
+    magic_bytes = _HEADER.pack(MAGIC, 0, 0, 0)[:4]
+    probe = off + 1
+    status = "torn_tail"
+    while True:
+        probe = data.find(magic_bytes, probe)
+        if probe < 0:
+            break
+        if _parse_at(probe) is not None:
+            status = "corrupt"
+            break
+        probe += 1
+    return {"status": status, "records": n_rec, "last_seq": last,
+            "bad_offset": off}
 
 
 def rewrite(path: str, records: List[Record]) -> None:

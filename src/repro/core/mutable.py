@@ -140,18 +140,23 @@ class MutableStore:
                  itq=None, fault_injector=None,
                  tombstone_frac: float = 0.25, slack_frac: float = 0.5,
                  min_slack: int = 8, max_pending: int = 1024,
+                 fault_scope: Optional[str] = None,
                  _recovering: bool = False):
         self.arena = arena
         self.root = root
         self.itq = itq
         self.faults = fault_injector
+        # tenant-scoped fault attribution: every site this store arms is
+        # keyed "<site>@<scope>" so a multi-tenant soak can poison (and
+        # count) one tenant's faults without touching its neighbours
+        self.fault_scope = fault_scope
         self.tombstone_frac = tombstone_frac
         self.slack_frac = slack_frac
         self.min_slack = min_slack
         self.max_pending = max_pending
         self._wal: Optional[wal_mod.WriteAheadLog] = None
         if root is not None:
-            hook = (fault_injector.hook("wal_append")
+            hook = (fault_injector.hook("wal_append", fault_scope)
                     if fault_injector is not None else None)
             self._wal = wal_mod.WriteAheadLog(self.wal_path, fault_hook=hook)
         self._id_map = {}           # external id -> arena slot
@@ -165,9 +170,14 @@ class MutableStore:
         self._epoch: Optional[Epoch] = None
         self._epoch_seq = 0
         self._dirty = 0             # mutations since the installed epoch
+        # buckets mutated since the installed epoch; None = the previous
+        # epoch cannot seed an incremental gather (startup, post-compact)
+        self._dirty_buckets: Optional[set] = None
+        self._epoch_host = None     # (codes, ids, values, starts) host copy
         self._need_compact = False
         self.counters = {"appended": 0, "deleted": 0, "flushes": 0,
-                         "compactions": 0, "audits": 0, "wal_records": 0}
+                         "compactions": 0, "audits": 0, "wal_records": 0,
+                         "bucket_gathers": 0, "incremental_flushes": 0}
         if not _recovering:
             if root is not None:
                 self.snapshot()     # recovery base covering bootstrap rows
@@ -299,6 +309,8 @@ class MutableStore:
                 a.n_used[b] = used + 1
                 self._id_map[int(ids[i])] = slot
                 self._n_live += 1
+                if self._dirty_buckets is not None:
+                    self._dirty_buckets.add(b)
             else:
                 # bucket slack exhausted: defer to compaction (the row is
                 # already durable in the WAL; backpressure is the caller's
@@ -329,6 +341,10 @@ class MutableStore:
                 self.arena.ids[slot] = -1
                 self._n_live -= 1
                 hit += 1
+                if self._dirty_buckets is not None:
+                    b = int(np.searchsorted(self.arena.cap_starts, slot,
+                                            side="right")) - 1
+                    self._dirty_buckets.add(b)
             else:
                 if overflow_ids is None:
                     overflow_ids = {t[0] for t in self._overflow}
@@ -366,7 +382,7 @@ class MutableStore:
         Crash-safe: the fault site fires before the swap, so a crash
         leaves the old arena intact and every mutation still in the WAL."""
         if self.faults is not None:
-            self.faults.check("compact_build")
+            self.faults.check("compact_build", self.fault_scope)
         self._log(wal_mod.COMPACT_BEGIN, b"")
         codes, ids, values = self._live_rows()
         arena = layout_mod.build_arena(
@@ -382,6 +398,7 @@ class MutableStore:
         self._rebuild_id_map()
         self.counters["compactions"] += 1
         self._dirty += 1            # the epoch no longer matches the arena
+        self._dirty_buckets = None  # every bucket moved: next flush is full
 
     def maybe_compact(self) -> bool:
         """Cooperative background compaction: the server calls this once
@@ -401,15 +418,48 @@ class MutableStore:
         if self._epoch is not None and self._dirty == 0:
             return self._epoch
         a = self.arena
-        mask = a.live_mask()
-        codes = np.ascontiguousarray(a.codes[mask])
-        ids = np.ascontiguousarray(a.ids[mask])
-        values = np.ascontiguousarray(a.values[mask])
-        # per-bucket live counts -> dense bucket starts
-        counts = np.array(
-            [int(np.count_nonzero(
-                mask[int(a.cap_starts[b]):int(a.cap_starts[b + 1])]))
-             for b in range(a.n_buckets)], np.int64)
+        incremental = (self._dirty_buckets is not None
+                       and self._epoch_host is not None
+                       and a.n_buckets > 0)
+        if incremental:
+            # re-gather ONLY buckets mutated since the last epoch; clean
+            # buckets are sliced straight out of the previous epoch's host
+            # arrays. Bit-identical to the full gather because the frozen
+            # key positions confine every mutation to its own bucket, so a
+            # clean bucket's dense rows cannot have changed.
+            p_codes, p_ids, p_values, p_starts = self._epoch_host
+            parts_c, parts_i, parts_v = [], [], []
+            counts = np.zeros(a.n_buckets, np.int64)
+            for b in range(a.n_buckets):
+                if b in self._dirty_buckets:
+                    s, used = int(a.cap_starts[b]), int(a.n_used[b])
+                    seg_ids = a.ids[s:s + used]
+                    m = seg_ids >= 0
+                    parts_c.append(a.codes[s:s + used][m])
+                    parts_i.append(seg_ids[m])
+                    parts_v.append(a.values[s:s + used][m])
+                else:
+                    lo, hi = int(p_starts[b]), int(p_starts[b + 1])
+                    parts_c.append(p_codes[lo:hi])
+                    parts_i.append(p_ids[lo:hi])
+                    parts_v.append(p_values[lo:hi])
+                counts[b] = parts_i[-1].shape[0]
+            codes = np.ascontiguousarray(np.concatenate(parts_c))
+            ids = np.ascontiguousarray(np.concatenate(parts_i))
+            values = np.ascontiguousarray(np.concatenate(parts_v))
+            self.counters["bucket_gathers"] += len(self._dirty_buckets)
+            self.counters["incremental_flushes"] += 1
+        else:
+            mask = a.live_mask()
+            codes = np.ascontiguousarray(a.codes[mask])
+            ids = np.ascontiguousarray(a.ids[mask])
+            values = np.ascontiguousarray(a.values[mask])
+            # per-bucket live counts -> dense bucket starts
+            counts = np.array(
+                [int(np.count_nonzero(
+                    mask[int(a.cap_starts[b]):int(a.cap_starts[b + 1])]))
+                 for b in range(a.n_buckets)], np.int64)
+            self.counters["bucket_gathers"] += a.n_buckets
         starts = np.zeros(a.n_buckets + 1, np.int64)
         np.cumsum(counts, out=starts[1:])
         starts = starts.astype(np.int32)   # what the layout (and the
@@ -420,13 +470,17 @@ class MutableStore:
                               inv=ident,
                               starts=jnp.asarray(starts, jnp.int32))
         if self.faults is not None:
-            self.faults.check("epoch_install")   # crash -> old epoch holds
+            # crash -> old epoch holds (and the dirty set keeps
+            # accumulating, so the retried flush gathers everything owed)
+            self.faults.check("epoch_install", self.fault_scope)
         self._epoch_seq += 1
         self._epoch = Epoch(seq=self._epoch_seq,
                             applied_seq=self._applied_seq, layout=layout,
                             store_ids=ids, values=jnp.asarray(values),
                             checksum=checksum)
         self._dirty = 0
+        self._dirty_buckets = set()
+        self._epoch_host = (codes, ids, values, starts)
         self.counters["flushes"] += 1
         return self._epoch
 
@@ -437,11 +491,20 @@ class MutableStore:
         Returns (dists, external ids), sentinel slots -> -1."""
         ep = self._epoch
         assert ep is not None, "flush() before searching"
+        if ep.n == 0:
+            # an empty epoch has no layout to plan over; the kernel-path
+            # sentinel contract (dist bins, id -1) applies verbatim
+            q = np.atleast_2d(np.asarray(q_packed)).shape[0]
+            return (np.full((q, k), self.d + 1, np.int32),
+                    np.full((q, k), -1, np.int64))
         from repro.core import engine as engine_mod
         eng = engine_mod.KNNEngine.from_epoch(ep, self.d)
         dists, pos = eng.search(q_packed, k)
+        dists = np.asarray(dists)
         pos = np.asarray(pos)
-        valid = pos >= 0
+        # surplus slots (k > live rows) carry sentinel distance bins and a
+        # clipped position — the distance, not the position, marks them
+        valid = (pos >= 0) & (dists <= self.d)
         ext = np.where(valid,
                        ep.store_ids[np.clip(pos, 0, max(ep.n - 1, 0))]
                        if ep.n else -1, -1)
@@ -488,7 +551,7 @@ class MutableStore:
             leaves += [np.asarray(x) for x in
                        (self.itq.mean, self.itq.proj, self.itq.rot)]
         step = self._applied_seq + 1
-        hook = (self.faults.hook("ckpt_save")
+        hook = (self.faults.hook("ckpt_save", self.fault_scope)
                 if self.faults is not None else None)
         ckpt.save(self.snap_root, step, leaves, blocking=True,
                   fault_hook=hook)
@@ -499,7 +562,7 @@ class MutableStore:
             self._wal.close()
             wal_mod.rewrite(self.wal_path, wal_mod.replay(
                 self.wal_path, after_seq=self._applied_seq))
-            hook = (self.faults.hook("wal_append")
+            hook = (self.faults.hook("wal_append", self.fault_scope)
                     if self.faults is not None else None)
             self._wal = wal_mod.WriteAheadLog(self.wal_path,
                                               fault_hook=hook)

@@ -1023,6 +1023,17 @@ def _scenario_rows(flat, lay, k):
                     "so the planner sees an ordinary prebuilt layout and "
                     "every rule above applies unchanged — readers keep "
                     "the pinned epoch for the whole search")),
+        ("tenant arena: mixed-tenant batch over one packed epoch",
+         dataclasses.replace(
+             plan_local(lay, k),
+             reason="tenant packing: every tenant's epoch concatenates "
+                    "into one bn-aligned codes array and tenancy becomes "
+                    "a per-query-block mask over the region's tiles, so "
+                    "a mixed-tenant batch runs ONE fused hist+emit pair "
+                    "with zero kernel changes; all-ones pad rows keep "
+                    "regions aligned and are corrected exactly on the "
+                    "host (b_pad histogram subtraction + tie-base shift) "
+                    "— bit-identical to per-tenant searches")),
     ]
 
 

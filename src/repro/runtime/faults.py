@@ -9,6 +9,14 @@ server uses ``store_search`` around the retrieval step and
 ``wal_append`` (before the intent-log write — a fired fault means the
 mutation was never acked), ``compact_build`` (before the rebuilt arena is
 swapped in), and ``epoch_install`` (before a fresh epoch is swapped in).
+
+Multi-tenant scoping (core/tenant.py): a site may be scoped to one tenant
+as ``"<site>@<tenant>"`` (:func:`site_key`). ``check(site, tenant=...)``
+looks the scoped key up first and falls back to the base site's
+probability, so a soak can poison exactly one tenant's WAL writes while
+every other tenant runs the shared base rate — and the per-site counters
+are kept under the scoped key, so blast-radius assertions can attribute
+every fired fault to the tenant it hit.
 """
 from __future__ import annotations
 
@@ -27,6 +35,12 @@ class InjectedFault(RuntimeError):
 # Exception classes the retry loops treat as transient. Anything else is a
 # real bug and must propagate — retrying around it would hide it.
 TRANSIENT = (InjectedFault, TimeoutError, ConnectionError)
+
+
+def site_key(site: str, tenant: Optional[str] = None) -> str:
+    """Canonical key for a (site, tenant) pair: ``site`` bare, or
+    ``site@tenant`` when scoped to one tenant of a multi-tenant arena."""
+    return site if tenant is None else f"{site}@{tenant}"
 
 
 class FaultInjector:
@@ -52,20 +66,27 @@ class FaultInjector:
         self.fired: Dict[str, int] = {}
         self.stalled: Dict[str, int] = {}
 
-    def check(self, site: str) -> None:
-        """Maybe stall, maybe raise — call at the top of a faultable op."""
-        self.calls[site] = self.calls.get(site, 0) + 1
-        sp = self.stall.get(site)
-        if sp is not None and self._rng.random() < sp[0]:
-            self.stalled[site] = self.stalled.get(site, 0) + 1
-            self._sleep(sp[1])
-        if self._rng.random() < self.p.get(site, 0.0):
-            self.fired[site] = self.fired.get(site, 0) + 1
-            raise InjectedFault(site)
+    def check(self, site: str, tenant: Optional[str] = None) -> None:
+        """Maybe stall, maybe raise — call at the top of a faultable op.
 
-    def hook(self, site: str) -> Callable[[], None]:
+        With ``tenant``, the scoped ``site@tenant`` probability wins when
+        configured, else the base site's rate applies; counters always land
+        under the scoped key so fired faults stay attributable."""
+        key = site_key(site, tenant)
+        self.calls[key] = self.calls.get(key, 0) + 1
+        sp = self.stall.get(key, self.stall.get(site) if tenant else None)
+        if sp is not None and self._rng.random() < sp[0]:
+            self.stalled[key] = self.stalled.get(key, 0) + 1
+            self._sleep(sp[1])
+        prob = self.p.get(key, self.p.get(site, 0.0) if tenant else 0.0)
+        if self._rng.random() < prob:
+            self.fired[key] = self.fired.get(key, 0) + 1
+            raise InjectedFault(key)
+
+    def hook(self, site: str,
+             tenant: Optional[str] = None) -> Callable[[], None]:
         """Zero-arg adapter for ``fault_hook`` seams (checkpoint manager)."""
-        return lambda: self.check(site)
+        return lambda: self.check(site, tenant)
 
 
 def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,

@@ -32,6 +32,16 @@ installed epoch per view, runs cooperative compaction + flush + periodic
 ``audit()`` in ``_after_tick``, and admits online ``submit_append``/
 ``submit_delete`` with shed-on-backpressure when compaction falls behind
 (``mutations_shed``/``pending_mutations`` in ``stats()``).
+
+A multi-tenant arena (core/tenant.py) attaches via ``tenants``: the same
+submit calls take a ``tenant=`` and walk the per-tenant shed ladder —
+``quarantined`` (namespace failed verification/recovery), ``rate_limited``
+(the tenant burned its ``max_mutations_per_tick`` fair share this tick —
+a saturating tenant throttles ITSELF, it cannot starve a quiet one),
+``quota_exceeded`` (row ceiling; retrying is pointless until deletes
+land), ``backlog_full`` (transient compaction pressure; retry later).
+``_after_tick`` runs quota-aware cooperative maintenance across tenants
+and per-tenant counters land under ``stats()["tenants"]``.
 """
 from __future__ import annotations
 
@@ -49,6 +59,7 @@ import jax.numpy as jnp
 from repro.checkpoint import manager as ckpt
 from repro.configs.base import ModelConfig
 from repro.core import retrieval as retrieval_mod
+from repro.core import tenant as tenant_mod
 from repro.dist import sharding, steps as steps_mod
 from repro.models import lm
 from repro.runtime import faults as faults_mod
@@ -142,7 +153,8 @@ class Server:
                  snapshot_dir: Optional[str] = None,
                  snapshot_every: Optional[int] = None,
                  audit_every: Optional[int] = None,
-                 mutate_flush_every: int = 4):
+                 mutate_flush_every: int = 4,
+                 tenants: Optional[tenant_mod.TenantArena] = None):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.max_batch, self.max_len = max_batch, max_len
         # a MutableStore (core/mutable.py) serves through its installed
@@ -158,6 +170,10 @@ class Server:
         self.store = store
         self.audit_every = audit_every
         self.mutate_flush_every = mutate_flush_every
+        self.tenants = tenants
+        self.tenant_counters: Dict[str, collections.Counter] = (
+            collections.defaultdict(collections.Counter))
+        self._tenant_tick_mut: Dict[str, int] = {}
         self.with_retrieval = cfg.retrieval.enabled and store is not None
         self.max_queue = max_queue
         self.default_deadline_ticks = default_deadline_ticks
@@ -355,15 +371,75 @@ class Server:
 
     # -- mutation admission (mutable stores) --------------------------------
 
-    def submit_append(self, codes, values=None) -> bool:
+    def _tenant_shed_reason(self, tid: str, n: int,
+                            is_append: bool) -> Optional[str]:
+        """The per-tenant admission ladder, most to least absolute:
+        quarantined -> rate_limited -> quota_exceeded -> backlog_full.
+        Deletes skip the capacity reasons — they relieve pressure, and
+        shedding them would wedge a tenant at its quota forever."""
+        t = self.tenants.tenants[tid]
+        if t.status != tenant_mod.HEALTHY:
+            return "quarantined"
+        lim = t.quota.max_mutations_per_tick
+        if lim is not None and self._tenant_tick_mut.get(tid, 0) + n > lim:
+            return "rate_limited"
+        return self.tenants.admission_check(tid, n) if is_append else None
+
+    def _tenant_mutate(self, tid: str, n: int, is_append: bool, fn) -> bool:
+        tc = self.tenant_counters[tid]
+        reason = self._tenant_shed_reason(tid, n, is_append)
+        if reason is not None:
+            tc["mutations_shed"] += n
+            tc["shed_" + reason] += n
+            self.counters["mutations_shed"] += n
+            return False
+        try:
+            fn()
+        except faults_mod.TRANSIENT:
+            tc["mutation_failures"] += 1
+            self.counters["mutation_failures"] += 1
+            return False
+        self._tenant_tick_mut[tid] = self._tenant_tick_mut.get(tid, 0) + n
+        tc["mutations_applied"] += n
+        self.counters["mutations_applied"] += n
+        return True
+
+    def tenant_search(self, queries, k: int):
+        """Mixed-tenant batched search through the packed arena (one fused
+        kernel pair for the whole batch), with the same bounded retry the
+        decode-path search gets."""
+        assert self.tenants is not None, "no tenant arena attached"
+
+        def attempt():
+            if self.faults is not None:
+                self.faults.check("store_search")
+            return self.tenants.search(queries, k)
+
+        try:
+            res = faults_mod.retry_call(attempt, retries=self.search_retries,
+                                        backoff_s=self.retry_backoff_s)
+        except faults_mod.TRANSIENT:
+            self.counters["search_failures"] += 1
+            raise
+        for tid in queries:
+            self.tenant_counters[tid]["searches"] += 1
+        return res
+
+    def submit_append(self, codes, values=None, tenant=None) -> bool:
         """Admit an online append to the mutable store. SHED (False) when
         compaction has fallen behind — the store's acked-durable backlog
         is bounded, so admission backpressure is the only honest answer
         (surfaced as ``mutations_shed`` in stats()). False also means NOT
         acknowledged: a WAL fault before the fsync sheds rather than acks.
+        With ``tenant``, admission walks the per-tenant ladder
+        (``_tenant_shed_reason``) against that tenant's quota instead.
         """
-        assert self.mstore is not None, "no mutable store attached"
         n = int(np.atleast_2d(np.asarray(codes)).shape[0])
+        if tenant is not None:
+            return self._tenant_mutate(
+                tenant, n, True,
+                lambda: self.tenants.append(tenant, codes, values=values))
+        assert self.mstore is not None, "no mutable store attached"
         if self.mstore.backlog_full:
             self.counters["mutations_shed"] += n
             return False
@@ -375,9 +451,13 @@ class Server:
         self.counters["mutations_applied"] += n
         return True
 
-    def submit_delete(self, ids) -> bool:
-        assert self.mstore is not None, "no mutable store attached"
+    def submit_delete(self, ids, tenant=None) -> bool:
         n = int(np.atleast_1d(np.asarray(ids)).shape[0])
+        if tenant is not None:
+            return self._tenant_mutate(
+                tenant, n, False,
+                lambda: self.tenants.delete(tenant, ids))
+        assert self.mstore is not None, "no mutable store attached"
         if self.mstore.backlog_full:
             self.counters["mutations_shed"] += n
             return False
@@ -414,6 +494,28 @@ class Server:
             if not report["ok"]:
                 self.counters["audit_failures"] += 1
                 log.error("store audit FAILED: %s", report["problems"])
+
+    def _tenant_maintenance(self):
+        """Per-tick multi-tenant lifecycle: refresh every tenant's rate
+        budget, run quota-aware cooperative maintenance (deepest backlog
+        compacts first, bounded per tick so one churning tenant cannot
+        monopolize the maintenance budget), periodic snapshots per
+        namespace. Per-tenant failures are contained by the arena."""
+        self._tenant_tick_mut = {}
+        rep = self.tenants.maintain(
+            compact_budget=1,
+            flush=(self.ticks % self.mutate_flush_every == 0))
+        self.counters["compactions"] += len(rep["compacted"])
+        for tid in rep["failed"]:
+            self.tenant_counters[tid]["maintenance_failures"] += 1
+        if (self.snapshot_every and self.tenants.root is not None
+                and self.ticks % self.snapshot_every == 0):
+            for tid, step in self.tenants.snapshot().items():
+                if step < 0:
+                    self.tenant_counters[tid]["snapshot_save_failures"] += 1
+                    self.counters["snapshot_save_failures"] += 1
+                else:
+                    self.counters["snapshot_saves"] += 1
 
     # -- admission / eviction ---------------------------------------------
 
@@ -538,6 +640,8 @@ class Server:
                 self.counters["degraded_ticks"] += 1
         if self.mstore is not None:
             self._store_maintenance()
+        if self.tenants is not None:
+            self._tenant_maintenance()
         if self.policy is not None and len(self.rungs) > 1:
             new = self.policy.update(self.rung, len(self.rungs),
                                      len(self.waiting), dt)
@@ -614,4 +718,18 @@ class Server:
             "flush_failures": c["flush_failures"],
             "audits": c["audits"],
             "audit_failures": c["audit_failures"],
+            **self._tenant_stats(),
         }
+
+    def _tenant_stats(self) -> dict:
+        if self.tenants is None:
+            return {}
+        t = self.tenants.stats()
+        per = t["tenants"]
+        for tid, row in per.items():
+            row.update(self.tenant_counters.get(tid, {}))
+        return {"tenants": per,
+                "n_tenants": t["n_tenants"],
+                "n_quarantined": t["n_quarantined"],
+                "packed_seq": t["packed_seq"],
+                "packed_rows": t["packed_rows"]}

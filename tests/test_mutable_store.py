@@ -159,6 +159,63 @@ def test_tombstone_threshold_triggers_compaction():
 
 
 # ---------------------------------------------------------------------------
+# incremental flush: dirty-bucket tracking replaces the O(N) host gather
+# ---------------------------------------------------------------------------
+
+def test_incremental_flush_gathers_only_dirty_buckets():
+    rng = np.random.default_rng(30)
+    st, _ = _mk(rng, n=256, min_slack=8, n_buckets=16)
+    nb = st.arena.n_buckets
+    assert nb == 16                     # the locality claim needs buckets
+    base = st.counters["bucket_gathers"]
+    # a localized mutation: 2 appends + 1 delete touch at most 3 buckets
+    st.append(_codes(rng, 2))
+    st.delete(np.asarray([5], np.int64))
+    st.flush()
+    assert st.counters["incremental_flushes"] == 1
+    assert st.counters["bucket_gathers"] - base <= 3 < nb
+    st.audit()
+
+
+def test_incremental_flush_epoch_bit_identical_to_full_gather():
+    rng = np.random.default_rng(31)
+    st, _ = _mk(rng, n=192)
+    model = _churn(st, rng, rounds=2, app=12, dele=6)
+    ep = st.flush()                     # incremental (no compaction churn)
+    assert st.counters["incremental_flushes"] >= 1
+    live = sorted(model)
+    ref = mutable.MutableStore(layout_mod.build_arena(
+        np.stack([model[i][0] for i in live]), D,
+        ids=np.asarray(live, np.int64),
+        values=np.asarray([model[i][1] for i in live], np.int32),
+        positions=st.arena.positions))
+    ep_ref = ref.flush()                # full gather of the same contents
+    assert np.array_equal(np.asarray(ep.layout.codes),
+                          np.asarray(ep_ref.layout.codes))
+    assert np.array_equal(np.asarray(ep.store_ids),
+                          np.asarray(ep_ref.store_ids))
+    assert np.array_equal(np.asarray(ep.values), np.asarray(ep_ref.values))
+    assert np.array_equal(np.asarray(ep.layout.starts),
+                          np.asarray(ep_ref.layout.starts))
+    assert ep.checksum == ep_ref.checksum
+    st.audit()
+
+
+def test_clean_flush_reuses_epoch_and_compaction_forces_full_gather():
+    rng = np.random.default_rng(32)
+    st, _ = _mk(rng, n=128)
+    ep = st.flush()
+    base = st.counters["bucket_gathers"]
+    assert st.flush() is ep             # clean: no gather at all
+    assert st.counters["bucket_gathers"] == base
+    st.delete(np.asarray([3], np.int64))
+    st.compact()                        # every row may move: incremental
+    st.flush()                          # seeding would be unsound
+    assert st.counters["bucket_gathers"] - base == st.arena.n_buckets
+    st.audit()
+
+
+# ---------------------------------------------------------------------------
 # crash at each fault site -> recovery loses no acked mutation
 # ---------------------------------------------------------------------------
 

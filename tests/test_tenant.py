@@ -1,0 +1,307 @@
+"""Multi-tenant packed arena (core/tenant.py): bit-identity of the
+mixed-tenant single-kernel batch to per-tenant searches, WAL-namespace
+blast-radius containment (interior corruption quarantines exactly one
+tenant), tenant-scoped fault sites, and the server's per-tenant admission
+ladder (quota_exceeded vs backlog_full vs rate_limited) with a starvation
+check."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import wal as wal_mod
+from repro.core import tenant as tenant_mod
+from repro.core.tenant import TenantArena, TenantQuota
+from repro.runtime import faults as faults_mod
+
+D = 64
+W = 2
+
+
+def _codes(rng, n):
+    return rng.integers(0, 2 ** 32, size=(n, W), dtype=np.uint32)
+
+
+def _mk_arena(rng, sizes, root=None, inj=None, bn=64, **kw):
+    ar = TenantArena(D, root=root, bn=bn, fault_injector=inj,
+                     min_slack=4, **kw)
+    for tid, n in sizes.items():
+        ar.create_tenant(tid, _codes(rng, n) if n else None,
+                         values=np.arange(n, dtype=np.int32) if n else None)
+    return ar
+
+
+def _assert_identical(ar, queries, k):
+    res = ar.search(queries, k)
+    for tid, q in queries.items():
+        dd, ee = res[tid]
+        sd, se = ar.tenant(tid).store.search(q, k)
+        assert np.array_equal(np.asarray(dd), np.asarray(sd)), tid
+        assert np.array_equal(np.asarray(ee), np.asarray(se)), tid
+
+
+# ---------------------------------------------------------------------------
+# the central pin: one pallas_call batch == per-tenant searches, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_bit_identical_to_per_tenant():
+    rng = np.random.default_rng(0)
+    # skewed sizes incl. an empty tenant and sizes that are not bn-aligned
+    ar = _mk_arena(rng, {"big": 300, "small": 17, "empty": 0, "mid": 130})
+    queries = {"big": _codes(rng, 33), "small": _codes(rng, 5),
+               "empty": _codes(rng, 3), "mid": _codes(rng, 1)}
+    # adversarial all-ones query: its distance to every pad row is 0, so a
+    # single missed pad-correction bin would corrupt its whole top-k
+    queries["big"][0] = np.full(W, 0xFFFFFFFF, np.uint32)
+    _assert_identical(ar, queries, k=10)
+    # k beyond the smallest tenant: surplus slots must sentinel identically
+    _assert_identical(ar, queries, k=40)
+
+
+def test_mixed_batch_identity_survives_churn_and_repack():
+    rng = np.random.default_rng(1)
+    ar = _mk_arena(rng, {"a": 150, "b": 40})
+    seq0 = ar.pack().seq
+    ar.append("a", _codes(rng, 30))
+    ar.delete("a", np.arange(0, 60, 4))
+    ar.append("b", _codes(rng, 90))       # overflows slack -> compaction
+    ar.delete("b", np.arange(0, 10))
+    ar.maintain(compact_budget=8)
+    assert ar.pack().seq > seq0           # epochs moved -> repacked
+    _assert_identical(ar, {"a": _codes(rng, 9), "b": _codes(rng, 6)}, k=7)
+    # unchanged epochs -> the packed view is reused, not rebuilt
+    seq1 = ar.pack().seq
+    assert ar.pack().seq == seq1
+
+
+def test_packed_regions_are_aligned_and_isolated():
+    rng = np.random.default_rng(2)
+    ar = _mk_arena(rng, {"a": 100, "b": 37}, bn=64)
+    ep = ar.pack()
+    own = {}
+    for tid, (start, n_real, cap) in ep.regions.items():
+        assert start % 64 == 0 and cap % 64 == 0 and n_real <= cap
+        assert np.all(ep.ext_ids[start + n_real:start + cap] == -1)
+        own[tid] = set(int(i) for i in ep.ext_ids[start:start + n_real])
+    # every returned id belongs to the query's OWN tenant
+    res = ar.search({"a": _codes(rng, 8), "b": _codes(rng, 8)}, k=50)
+    for tid in ("a", "b"):
+        got = set(int(i) for i in res[tid][1].ravel() if int(i) >= 0)
+        assert got <= own[tid]
+        assert len(got) > 0
+
+
+# ---------------------------------------------------------------------------
+# blast radius: one corrupt namespace quarantines one tenant, never the arena
+# ---------------------------------------------------------------------------
+
+def _churned_disk_arena(tmp_path, rng, tids=("t0", "t1", "t2")):
+    ar = _mk_arena(rng, {t: 48 for t in tids}, root=str(tmp_path))
+    models = {}
+    for t in tids:
+        st = ar.tenant(t).store
+        models[t] = {int(i): st.arena.codes[st._id_map[int(i)]].copy()
+                     for i in st._id_map}
+        c = _codes(rng, 6)
+        for j, ext in enumerate(ar.append(t, c)):
+            models[t][int(ext)] = c[j]
+        ar.delete(t, np.arange(0, 8, np.int64(2)))
+        for v in range(0, 8, 2):
+            models[t].pop(v, None)
+    ar.maintain(compact_budget=8)
+    return ar, models
+
+
+def _assert_matches(store, model):
+    ep = store.epoch
+    ids = np.asarray(ep.store_ids)
+    codes = np.asarray(ep.layout.codes)
+    assert set(int(i) for i in ids) == set(model)
+    for i in range(ids.shape[0]):
+        assert np.array_equal(codes[i], model[int(ids[i])])
+
+
+def test_interior_wal_corruption_quarantines_only_that_tenant(tmp_path):
+    rng = np.random.default_rng(3)
+    ar, models = _churned_disk_arena(tmp_path, rng)
+    ar.close()
+    # flip one bit in the FIRST record of t1's log: acked records now sit
+    # past the bad frame — tolerant replay would silently drop them, so
+    # recovery must quarantine instead
+    sick = wal_mod.namespace_root(str(tmp_path), "t1")
+    wal_path = os.path.join(sick, "wal.log")
+    with open(wal_path, "r+b") as f:
+        f.seek(wal_mod._HEADER.size + 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0x10]))
+    assert wal_mod.verify(wal_path)["status"] == "corrupt"
+
+    rec = TenantArena.recover(D, str(tmp_path))
+    assert rec.tenant("t1").status == tenant_mod.QUARANTINED
+    assert "corruption" in rec.tenant("t1").error
+    assert rec.healthy_tids() == ["t0", "t2"]
+    # healthy tenants lost nothing and keep serving
+    for t in ("t0", "t2"):
+        _assert_matches(rec.tenant(t).store, models[t])
+    _assert_identical(rec, {"t0": _codes(rng, 4), "t2": _codes(rng, 4)}, 5)
+    with pytest.raises(tenant_mod.TenantQuarantined):
+        rec.search({"t1": _codes(rng, 2)}, 5)
+    # the sick namespace is untouched on disk for offline repair
+    assert wal_mod.verify(wal_path)["status"] == "corrupt"
+    rec.close()
+
+
+def test_torn_tail_recovers_normally(tmp_path):
+    rng = np.random.default_rng(4)
+    ar, models = _churned_disk_arena(tmp_path, rng, tids=("t0", "t1"))
+    ar.close()
+    wal_path = os.path.join(wal_mod.namespace_root(str(tmp_path), "t0"),
+                            "wal.log")
+    with open(wal_path, "r+b") as f:
+        f.truncate(os.path.getsize(wal_path) - 3)
+    assert wal_mod.verify(wal_path)["status"] == "torn_tail"
+    rec = TenantArena.recover(D, str(tmp_path))
+    assert rec.healthy_tids() == ["t0", "t1"]
+    # t0 recovers to the last whole record: everything before the torn
+    # tail survives, and the only divergence is the tail record itself
+    # (here the delete of {0,2,4,6}, whose rows resurrect)
+    got = set(int(i) for i in rec.tenant("t0").store.epoch.store_ids)
+    assert set(models["t0"]) <= got
+    assert got - set(models["t0"]) <= {0, 2, 4, 6}
+    _assert_matches(rec.tenant("t1").store, models["t1"])
+    rec.close()
+
+
+def test_transient_recovery_faults_retry_not_quarantine(tmp_path):
+    rng = np.random.default_rng(5)
+    ar, models = _churned_disk_arena(tmp_path, rng, tids=("t0",))
+    ar.close()
+    inj = faults_mod.FaultInjector(seed=5, p={"epoch_install@t0": 0.9})
+    rec = TenantArena.recover(D, str(tmp_path), fault_injector=inj)
+    assert rec.healthy_tids() == ["t0"]
+    _assert_matches(rec.tenant("t0").store, models["t0"])
+    assert inj.fired.get("epoch_install@t0", 0) > 0   # retries were real
+    rec.close()
+
+
+def test_scoped_fault_sites_hit_one_tenant_only(tmp_path):
+    rng = np.random.default_rng(6)
+    inj = faults_mod.FaultInjector(seed=6, p={"wal_append@t1": 1.0})
+    ar = _mk_arena(rng, {"t0": 16, "t1": 16}, root=str(tmp_path), inj=inj)
+    ar.append("t0", _codes(rng, 2))               # base rate 0: fine
+    with pytest.raises(faults_mod.InjectedFault):
+        ar.append("t1", _codes(rng, 2))           # scoped rate 1: fires
+    assert inj.fired["wal_append@t1"] >= 1
+    assert inj.fired.get("wal_append@t0", 0) == 0
+    ar.close()
+
+
+# ---------------------------------------------------------------------------
+# server admission: quota / fairness edges (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_env():
+    from repro import compat
+    from repro.configs import get_config, scaled_down
+    from repro.models import lm
+    cfg = scaled_down(get_config("gemma-2b"), d_model=64, d_ff=128,
+                      vocab_size=256)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, mesh, params
+
+
+def _srv(serve_env, ar, **kw):
+    from repro.runtime import server as server_mod
+    cfg, mesh, params = serve_env
+    return server_mod.Server(cfg, mesh, params, max_batch=1, max_len=8,
+                             tenants=ar, **kw)
+
+
+def test_append_at_exact_row_quota_then_shed(serve_env):
+    rng = np.random.default_rng(7)
+    ar = _mk_arena(rng, {"q": 30})
+    ar.tenant("q").quota = TenantQuota(max_rows=32)
+    srv = _srv(serve_env, ar)
+    assert srv.submit_append(_codes(rng, 2), tenant="q")   # lands AT quota
+    assert ar.tenant("q").store.n_live == 32
+    assert not srv.submit_append(_codes(rng, 1), tenant="q")
+    tc = srv.stats()["tenants"]["q"]
+    assert tc["shed_quota_exceeded"] == 1 and tc["mutations_applied"] == 2
+    # deletes are never quota-shed — they are how the tenant gets back
+    # under its ceiling
+    assert srv.submit_delete(np.arange(4, dtype=np.int64), tenant="q")
+    assert srv.submit_append(_codes(rng, 1), tenant="q")
+
+
+def test_quota_exceeded_vs_backlog_full_reasons(serve_env):
+    rng = np.random.default_rng(8)
+    # zero slack + tiny pending cap: appends overflow to the compaction
+    # backlog immediately and backpressure must surface as backlog_full,
+    # NOT quota_exceeded (the row ceiling is far away)
+    ar = TenantArena(D, bn=64, slack_frac=0.0, min_slack=0, max_pending=4)
+    ar.create_tenant("b", _codes(rng, 64),
+                     quota=TenantQuota(max_rows=1000))
+    srv = _srv(serve_env, ar)
+    assert srv.submit_append(_codes(rng, 4), tenant="b")   # fills backlog
+    assert not srv.submit_append(_codes(rng, 1), tenant="b")
+    tc = srv.stats()["tenants"]["b"]
+    assert tc["shed_backlog_full"] == 1
+    assert tc.get("shed_quota_exceeded", 0) == 0
+    srv.tick()                       # maintenance compacts the backlog
+    assert srv.submit_append(_codes(rng, 1), tenant="b")   # reopens
+
+
+def test_saturating_tenant_cannot_starve_quiet_tenant(serve_env):
+    rng = np.random.default_rng(9)
+    ar = _mk_arena(rng, {"noisy": 16, "quiet": 16})
+    ar.tenant("noisy").quota = TenantQuota(max_mutations_per_tick=4)
+    ar.tenant("quiet").quota = TenantQuota(max_mutations_per_tick=4)
+    srv = _srv(serve_env, ar)
+    quiet_ok = quiet_try = 0
+    for _ in range(12):
+        for _ in range(10):          # noisy slams far past its fair share
+            srv.submit_append(_codes(rng, 1), tenant="noisy")
+        quiet_try += 1
+        quiet_ok += int(srv.submit_append(_codes(rng, 1), tenant="quiet"))
+        srv.tick()                   # budgets refresh per tick
+    tn = srv.stats()["tenants"]["noisy"]
+    tq = srv.stats()["tenants"]["quiet"]
+    # the saturating tenant throttles ITSELF (rate_limited shed)...
+    assert tn["shed_rate_limited"] > 0
+    assert tn["mutations_applied"] <= 4 * 12
+    # ...and the quiet tenant's shed rate stays ~0: nothing starved it
+    assert quiet_ok == quiet_try
+    assert tq.get("mutations_shed", 0) == 0
+
+
+def test_rate_budget_refreshes_each_tick(serve_env):
+    rng = np.random.default_rng(10)
+    ar = _mk_arena(rng, {"r": 8})
+    ar.tenant("r").quota = TenantQuota(max_mutations_per_tick=3)
+    srv = _srv(serve_env, ar)
+    assert srv.submit_append(_codes(rng, 3), tenant="r")
+    assert not srv.submit_append(_codes(rng, 1), tenant="r")
+    assert srv.stats()["tenants"]["r"]["shed_rate_limited"] == 1
+    srv.tick()
+    assert srv.submit_append(_codes(rng, 3), tenant="r")
+
+
+def test_server_sheds_for_quarantined_tenant(serve_env):
+    rng = np.random.default_rng(11)
+    ar = _mk_arena(rng, {"ok": 16, "sick": 16})
+    ar.quarantine("sick", "test-induced")
+    srv = _srv(serve_env, ar)
+    assert not srv.submit_append(_codes(rng, 1), tenant="sick")
+    assert srv.stats()["tenants"]["sick"]["shed_quarantined"] == 1
+    assert srv.submit_append(_codes(rng, 1), tenant="ok")
+    assert srv.stats()["n_quarantined"] == 1
+    # maintenance and packed search keep working over the healthy set
+    srv.tick()
+    res = srv.tenant_search({"ok": _codes(rng, 2)}, k=3)
+    assert res["ok"][0].shape == (2, 3)
