@@ -34,3 +34,19 @@ def run(report):
     kprime_report = 16 * 8 * E_BYTE
     report(row("fig6/statistical_reduction_report", 0.0,
                f"rel={full_report/kprime_report:.0f}x_fewer_report_joules"))
+
+    # the approx tier, from the SAME geometry the planner reports
+    # (explain()["geometry"]): int8 plane bytes + MXU MAC energy. It moves
+    # 8x the packed bytes but the paper-relevant ratio is vs the fp32 scan
+    # it replaces in the serving ladder — and the candidate-pool traffic
+    # (n_blocks*l per query instead of n) is what the partial reduce
+    # deletes from the select stage.
+    from repro.core import plan as plan_mod
+    g = plan_mod.plan_local(
+        plan_mod.StoreStats(n=n, d=d, w=d // 32, q=n_q, backend="cpu"),
+        10, select="approx", recall_target=0.9).explain()["geometry"]
+    approx = g["plane_bytes"] * E_BYTE + g["scores_flops"] / 2 * E_FLOP
+    report(row("fig6/approx_mxu_planes", 0.0,
+               f"J_per_query={approx/n_q:.3e};rel={fp32/(approx/n_q):.1f}x;"
+               f"cand_per_query={g['cand_per_query']};"
+               f"flops_per_byte={g['flops_per_byte']:.0f}"))

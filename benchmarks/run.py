@@ -12,14 +12,15 @@ import json
 import sys
 import traceback
 
-from benchmarks import (bench_compounding, bench_energy_proxy, bench_indexing,
-                        bench_mutate, bench_packing, bench_serve,
-                        bench_statistical_reduction, bench_tenant,
-                        bench_throughput, bench_workloads)
+from benchmarks import (bench_approx, bench_compounding, bench_energy_proxy,
+                        bench_indexing, bench_mutate, bench_packing,
+                        bench_serve, bench_statistical_reduction,
+                        bench_tenant, bench_throughput, bench_workloads)
 
 BENCHES = [
     ("fig4", bench_throughput),
     ("fig5", bench_indexing),
+    ("approx", bench_approx),
     ("fig6", bench_energy_proxy),
     ("table2", bench_workloads),
     ("fig8", bench_packing),

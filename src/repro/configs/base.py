@@ -103,6 +103,11 @@ class RetrievalConfig:
     # "select=fused_scan,chunk=4096,layout=off" (see plan.parse_force);
     # "" applies none. The escape hatch that replaces ad-hoc knobs.
     force_plan: str = ""
+    # approx tier only (select/plan = "approx"): expected recall@k floor
+    # the analytical bound sizes the per-block candidate count L for;
+    # 1.0 keeps the full block — exact, bit-identical to "fused". Exact
+    # selects ignore it.
+    recall_target: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -61,12 +61,16 @@ DEFAULT_CHUNK = 1 << 16
 
 # concrete select paths the IR can name; "auto" is a REQUEST that
 # resolve_select turns into one of these ("composite" is the old literal
-# "auto": XLA top_k over the f32 composite key)
-SELECT_PATHS = ("composite", "counting", "bisect", "fused", "fused_scan")
+# "auto": XLA top_k over the f32 composite key; "approx" is the
+# compute-bound MXU partial-reduce tier — opt-in, never an "auto" target,
+# exact only at recall_target=1.0)
+SELECT_PATHS = ("composite", "counting", "bisect", "fused", "fused_scan",
+                "approx")
 # accepted request aliases -> IR path ("auto" resolves by rule instead)
 _SELECT_ALIASES = {"auto": "auto", "composite": "composite",
                    "counting": "counting", "bisect": "bisect",
-                   "fused": "fused", "fused_scan": "fused_scan"}
+                   "fused": "fused", "fused_scan": "fused_scan",
+                   "approx": "approx"}
 
 
 class DistanceMethod:
@@ -112,6 +116,8 @@ class SelectStage:
     path: str = "composite"     # one of SELECT_PATHS
     method: str = DistanceMethod.XOR  # distance method, materializing paths
     chunk: int = DEFAULT_CHUNK  # scan granularity (ignored by "fused")
+    recall_target: float = 1.0  # approx tier only: sizes the per-block L
+                                # via the analytical bound; 1.0 = exact
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +210,8 @@ class QueryPlan:
         if self.candidates.layout != "none":
             c += f"+{self.candidates.layout}"
         s = self.select.path
+        if s == "approx":
+            s += f"@r{self.select.recall_target:g}"
         m = self.merge.kind
         if self.merge.kind == "sharded":
             m = self.merge.strategy or "sharded"
@@ -215,6 +223,17 @@ class QueryPlan:
         if self.candidates.kind == "gather":
             return ("xor+popcount gather", "topk.counting_topk")
         path = self.select.path
+        if path == "approx":
+            ks = ("approx_select.bit_planes (+/-1 int8)",
+                  "lax.dot_general int8->int32 Hamming-as-matmul (MXU)",
+                  "approx_select partial-reduce top-L + lexicographic "
+                  "sort merge")
+            if self.merge.kind == "sharded":
+                ks += (("approx_select.approx_topk_sharded (pool-hist psum "
+                        "+ disjoint-slot output psum)",)
+                       if self.merge.strategy == "hist_merge"
+                       else ("all_gather k'-per-shard + sort_key_val cut",))
+            return ks
         if path in ("fused", "fused_scan"):
             ks = ("kernels.topk_select.hamming_hist_pallas",
                   "kernels.topk_select.hamming_emit_pallas")
@@ -236,6 +255,12 @@ class QueryPlan:
         return ks
 
     def _predicted_pruning(self) -> str:
+        if self.select.path == "approx":
+            if self.candidates.kind == "block_mask":
+                return ("per-query block mask gates the score matmul; the "
+                        "partial reduce keeps L candidates per enabled block")
+            return ("partial reduce: only n_blocks*L candidates leave the "
+                    "score matmul (the analytical recall bound sizes L)")
         if self.candidates.kind == "block_mask":
             return ("pass 1 skips every tile outside the probed buckets; "
                     "pass 2 composes the mask with the block-min bound")
@@ -271,6 +296,35 @@ class QueryPlan:
         if self.candidates.kind == "gather":
             cap = self.probe.nprobe or 1
             return {"kind": "gather", "cand_width_hint": cap}
+        if self.select.path == "approx":
+            from repro.kernels import approx_select
+
+            n_sh = max(self.n_shards, 1) if self.merge.kind == "sharded" \
+                else 1
+            n_eff = max(self.n // n_sh, 1)
+            bn = tuning.approx_blocks(self.q, n_eff, self.w, backend=backend)
+            bn = max(min(bn, n_eff), 1)
+            n_blocks = -(-n_eff // bn)
+            k_k = max(min(self.k, self.n), 1)
+            rt = self.select.recall_target
+            # the recall bound covers the GLOBAL pool on sharded plans
+            l = max(min(approx_select.l_for_recall(
+                k_k, n_blocks * n_sh, bn, rt), bn), 1)
+            # one int8 matmul scores everything: 2*Q*N*d MACs over
+            # (Q+N)*d plane bytes — compute-bound by construction
+            flops = 2 * self.q * self.n * self.d
+            plane_bytes = (self.q + self.n) * self.d
+            return {
+                "kind": "approx", "bn": bn, "n_blocks": n_blocks,
+                "l_per_block": l, "cand_per_query": n_blocks * l,
+                "recall_target": rt,
+                "predicted_recall": round(approx_select.expected_recall(
+                    k_k, n_blocks * n_sh, l), 6),
+                "scores_flops": flops, "plane_bytes": plane_bytes,
+                "flops_per_byte": round(flops / max(plane_bytes, 1), 2),
+                "hint_source": tuning.hint_source(
+                    backend, "approx", self.q, n_eff, self.w, 1),
+            }
         if self.select.path not in ("fused", "fused_scan"):
             # mirror the executor's resolution exactly (falsy -> default)
             eff = min(self.select.chunk or DEFAULT_CHUNK, self.n)
@@ -386,9 +440,10 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
         path = _SELECT_ALIASES.get(f["select"], f["select"])
         if path == "auto" or path not in SELECT_PATHS:
             raise ValueError(f"force_plan select={f['select']!r}")
-        if cand.kind == "block_mask":
-            # the masked candidate stage IS the fused kernels; a different
-            # select cannot run it — record the drop instead of lying
+        if cand.kind == "block_mask" and path not in ("fused", "approx"):
+            # the masked candidate stage runs the fused kernels or the
+            # approx partial reduce (both consume the per-tile mask); any
+            # other select cannot — record the drop instead of lying
             reason += f"; forced select={path} ignored (block_mask runs fused)"
         else:
             sel = dataclasses.replace(sel, path=path)
@@ -397,6 +452,17 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
         sel = dataclasses.replace(sel, method=f["method"])
     if "chunk" in f:
         sel = dataclasses.replace(sel, chunk=int(f["chunk"]))
+    if "recall_target" in f:
+        rt = float(f["recall_target"])
+        if not 0.0 < rt <= 1.0:
+            raise ValueError(f"force_plan recall_target={f['recall_target']!r}"
+                             f" (must be in (0, 1])")
+        if sel.path == "approx":
+            sel = dataclasses.replace(sel, recall_target=rt)
+            reason += f"; forced recall_target={rt:g}"
+        else:
+            reason += (f"; forced recall_target ignored "
+                       f"(select={sel.path} is exact)")
     if "layout" in f:
         lay = {"off": "none", "on": "prebuilt"}.get(f["layout"], f["layout"])
         if lay not in ("none", "prebuilt", "local_sort"):
@@ -451,9 +517,9 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
             raise ValueError(f"force_plan merge={mv!r}")
         if merge.kind != "sharded":
             reason += "; forced merge ignored (local plan has no merge)"
-        elif mv == "hist_merge" and sel.path != "fused":
+        elif mv == "hist_merge" and sel.path not in ("fused", "approx"):
             reason += ("; forced merge=hist_merge ignored "
-                       "(needs the fused select)")
+                       "(needs the fused or approx select)")
         elif mv == "hist_merge" and merge.k_local < plan.k:
             reason += ("; forced merge=hist_merge ignored "
                        "(k_local < k is the statistical concat merge)")
@@ -461,19 +527,20 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
             merge = dataclasses.replace(merge, strategy=mv)
             reason += f"; forced merge={mv}"
     unknown = set(f) - {"select", "method", "chunk", "layout", "candidates",
-                        "k_local", "reorder_local", "merge"}
+                        "k_local", "reorder_local", "merge", "recall_target"}
     if unknown:
         raise ValueError(f"unknown force_plan keys: {sorted(unknown)}")
     # re-enforce the planner's invariants the overrides may have broken:
-    # hist_merge runs the two-pass kernels — a forced non-fused select
-    # demotes the sharded merge back to the concat/sort fallback
-    if merge.strategy == "hist_merge" and sel.path != "fused":
+    # hist_merge races histograms — of per-shard rows (fused) or per-shard
+    # candidate pools (approx); any other forced select demotes the
+    # sharded merge back to the concat/sort fallback
+    if merge.strategy == "hist_merge" and sel.path not in ("fused", "approx"):
         merge = dataclasses.replace(merge, strategy="concat_sort")
         reason += ("; hist_merge demoted to concat_sort "
                    f"(select={sel.path} cannot race histograms)")
-    # only the fused select consumes a layout (materializing selects must
-    # scan the original order, or tie ids drift from the legacy paths)
-    if (cand.kind == "full" and sel.path != "fused"
+    # only the fused/approx selects consume a layout (materializing selects
+    # must scan the original order, or tie ids drift from the legacy paths)
+    if (cand.kind == "full" and sel.path not in ("fused", "approx")
             and cand.layout != "none"):
         cand = dataclasses.replace(cand, layout="none")
         if merge.reorder_local:
@@ -531,7 +598,7 @@ def resolve_select(select: Optional[str], stats: StoreStats,
 def _resolve_layout(path: str, stats: StoreStats, layout_policy: str
                     ) -> Tuple[str, str]:
     """Which physical layout the full-scan candidate stage streams."""
-    if path != "fused" or layout_policy == "off":
+    if path not in ("fused", "approx") or layout_policy == "off":
         return "none", ""
     if stats.has_layout:
         return "prebuilt", "streams the prebuilt BucketLayout"
@@ -549,20 +616,25 @@ def _resolve_layout(path: str, stats: StoreStats, layout_policy: str
 
 def plan_local(stats: StoreStats, k: int, select: Optional[str] = "auto",
                method: str = DistanceMethod.XOR, chunk: int = DEFAULT_CHUNK,
-               layout_policy: str = "auto", force=None) -> QueryPlan:
+               layout_policy: str = "auto", recall_target: float = 1.0,
+               force=None) -> QueryPlan:
     """Plan a single-device full scan (the ``search_chunked`` /
     ``KNNEngine.search`` / local ``knn_logits`` shape).
 
     ``layout_policy``: "auto" uses a prebuilt layout when present; "require"
     (config said ``layout != "none"``) falls back to a per-call local_sort;
-    "off" never streams a layout (the legacy ``use_layout=False``)."""
+    "off" never streams a layout (the legacy ``use_layout=False``).
+    ``recall_target``: the approx tier's knob (ignored by exact selects)."""
     path, reason = resolve_select(select, stats, layout_policy)
     lay, lay_note = _resolve_layout(path, stats, layout_policy)
     if lay_note:
         reason += "; " + lay_note
+    if path == "approx" and recall_target >= 1.0:
+        reason += "; recall_target=1 keeps the full block (exact pool)"
     plan = QueryPlan(
         probe=ProbeStage(), candidates=CandidateStage(kind="full", layout=lay),
-        select=SelectStage(path=path, method=method, chunk=chunk),
+        select=SelectStage(path=path, method=method, chunk=chunk,
+                           recall_target=recall_target),
         merge=MergeStage(), n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
         mean_bucket_rows=stats.mean_bucket_rows,
         backend=stats.backend, reason=reason)
@@ -574,7 +646,7 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
                  method: str = DistanceMethod.XOR, chunk: int = DEFAULT_CHUNK,
                  reorder_local: bool = False, layout_policy: str = "auto",
                  merge: Optional[str] = None, uneven: bool = False,
-                 force=None) -> QueryPlan:
+                 recall_target: float = 1.0, force=None) -> QueryPlan:
     """Plan a mesh-sharded search.
 
     Merge strategy: the default for an exact sharded search (k_local == k)
@@ -612,15 +684,17 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
     else:
         path, reason = resolve_select(select, stats, layout_policy)
     want_rl = reorder_local or layout_policy == "require"
-    rl = want_rl and path == "fused"
+    rl = want_rl and path in ("fused", "approx")
     if want_rl and not rl:
         reason += "; reorder_local ignored (only the fused select consumes it)"
     elif rl:
         reason += "; per-shard local_sort before the scan"
     if k_local < k:
         reason += f"; statistical reduction k'={k_local} (inexact, bounded)"
-    strategy = "hist_merge" if (path == "fused" and k_local >= k) else \
-        "concat_sort"
+    # hist_merge races histograms of rows (fused) or candidate pools
+    # (approx) — both produce the psum-able (Q, bins) counts
+    strategy = "hist_merge" if (path in ("fused", "approx")
+                                and k_local >= k) else "concat_sort"
     if merge is not None:
         if merge not in ("hist_merge", "concat_sort"):
             raise ValueError(f"unknown merge strategy {merge!r}; "
@@ -628,7 +702,8 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
         if merge == "hist_merge" and strategy != "hist_merge":
             reason += ("; merge=hist_merge ignored ("
                        + ("k_local < k is the statistical concat merge"
-                          if k_local < k else "needs the fused select") + ")")
+                          if k_local < k else "needs the fused or approx "
+                          "select") + ")")
         elif merge != strategy:
             strategy = merge
             reason += f"; forced merge={merge}"
@@ -636,7 +711,8 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
         probe=ProbeStage(),
         candidates=CandidateStage(kind="full",
                                   layout="local_sort" if rl else "none"),
-        select=SelectStage(path=path, method=method, chunk=chunk),
+        select=SelectStage(path=path, method=method, chunk=chunk,
+                           recall_target=recall_target),
         merge=MergeStage(kind="sharded", k_local=k_local, axes=tuple(axes),
                          reorder_local=rl, strategy=strategy),
         n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
@@ -646,6 +722,7 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
 
 def plan_index(stats: StoreStats, k: int, kind: str, nprobe: int = 0,
                n_tables: int = 0, use_layout: Optional[bool] = None,
+               select: Optional[str] = None, recall_target: float = 1.0,
                force=None) -> QueryPlan:
     """Plan an index-probed search (kmeans/lsh/kdtree traversal feeds the
     candidate stage). Default: bucket-contiguous indexes drive the MASKED
@@ -658,9 +735,16 @@ def plan_index(stats: StoreStats, k: int, kind: str, nprobe: int = 0,
     if use_layout:
         assert stats.has_layout, "index built with reorder=False"
         cand = CandidateStage(kind="block_mask", layout="prebuilt")
-        sel = SelectStage(path="fused", chunk=0)
-        reason = ("masked fused kernels over the bucket-contiguous layout: "
-                  "probed buckets become the pass-1 enable mask")
+        if select == "approx":
+            sel = SelectStage(path="approx", chunk=0,
+                              recall_target=recall_target)
+            reason = ("masked approx tier over the bucket-contiguous "
+                      "layout: probed buckets gate the score matmul at "
+                      "per-query block granularity")
+        else:
+            sel = SelectStage(path="fused", chunk=0)
+            reason = ("masked fused kernels over the bucket-contiguous "
+                      "layout: probed buckets become the pass-1 enable mask")
     else:
         cand = CandidateStage(kind="gather", layout="none")
         sel = SelectStage(path="counting", chunk=0)
@@ -727,6 +811,14 @@ def _scan_select(codes_packed: jax.Array, q_packed: jax.Array, k: int,
         from repro.kernels import ops
 
         bd, bi = ops.hamming_topk(q_packed, codes_packed, k, d + 1)
+        return bd, bi + id_offset
+
+    if sel.path == "approx":
+        from repro.kernels import approx_select
+
+        bd, bi = approx_select.approx_topk(
+            q_packed, codes_packed, k, d + 1,
+            recall_target=sel.recall_target)
         return bd, bi + id_offset
 
     chunk = min(sel.chunk or DEFAULT_CHUNK, N)
@@ -822,15 +914,15 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
     if shard_n_valid is not None:
         nv_all = jnp.asarray(shard_n_valid, jnp.int32)
         assert nv_all.shape == (n_dev,), (nv_all.shape, n_dev)
-        if plan.select.path != "fused":
-            # only the two-pass kernels mask per-shard padding exactly
-            # (by global row id, in-kernel); refuse up front rather than
-            # silently running a select the plan did not promise
+        if plan.select.path not in ("fused", "approx"):
+            # only the two-pass kernels and the approx partial reduce mask
+            # per-shard padding exactly (by global row id); refuse up front
+            # rather than silently running a select the plan did not promise
             raise ValueError(
-                f"shard_n_valid (uneven shards) needs the fused select; "
-                f"this plan resolved select={plan.select.path!r} — leave "
-                f"select='auto' (plan_sharded resolves it to 'fused' when "
-                f"shard_n_valid is coming) or force select='fused'")
+                f"shard_n_valid (uneven shards) needs the fused or approx "
+                f"select; this plan resolved select={plan.select.path!r} — "
+                f"leave select='auto' (plan_sharded resolves it to 'fused' "
+                f"when shard_n_valid is coming) or force select='fused'")
 
     def local(codes_loc, q):
         from repro.kernels import ops
@@ -849,7 +941,15 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
         if plan.candidates.layout == "local_sort":
             codes_l, perm_l = layout_mod.local_sort(codes_loc, plan.d,
                                                     n_valid=nv)
+        approx = plan.select.path == "approx"
         if hist_merge:
+            if approx:
+                from repro.kernels import approx_select
+
+                return approx_select.approx_topk_sharded(
+                    q, codes_l, k, plan.d + 1, axes, n_shards=n_dev,
+                    recall_target=plan.select.recall_target,
+                    n_valid=nv, id_base=ib, n_total=nt, perm=perm_l)
             return ops.hamming_topk_sharded(
                 q, codes_l, k, plan.d + 1, axes, n_shards=n_dev,
                 n_valid=nv, id_base=ib, n_total=nt, perm=perm_l)
@@ -857,8 +957,15 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
             # uneven shards on the legacy merge: mask padding in-kernel,
             # report ids in the unpadded global space, sentinels at the
             # global total so the sorted cut ranks them last everywhere
-            ld, li = ops.hamming_topk(q, codes_l, k_local, plan.d + 1,
-                                      n_valid=nv)
+            if approx:
+                from repro.kernels import approx_select
+
+                ld, li = approx_select.approx_topk(
+                    q, codes_l, k_local, plan.d + 1,
+                    recall_target=plan.select.recall_target, n_valid=nv)
+            else:
+                ld, li = ops.hamming_topk(q, codes_l, k_local, plan.d + 1,
+                                          n_valid=nv)
             if perm_l is not None:
                 li = jnp.where(li < nv,
                                perm_l[jnp.minimum(li, n_loc - 1)], li)
@@ -926,6 +1033,15 @@ def execute(plan: QueryPlan, q_packed: jax.Array, *,
                                 shard_n_valid=shard_n_valid)
     if plan.candidates.kind == "block_mask":
         assert layout is not None
+        if plan.select.path == "approx":
+            from repro.kernels import approx_select
+
+            assert not return_stats, \
+                "pruning stats only exist on the fused masked path"
+            return approx_select.masked_approx_topk(
+                layout, q_packed, plan.k, plan.d, probe=probe,
+                cand_ids=cand_ids,
+                recall_target=plan.select.recall_target)
         return layout_mod.masked_topk(layout, q_packed, plan.k, plan.d,
                                       probe=probe, cand_ids=cand_ids,
                                       return_stats=return_stats)
@@ -981,11 +1097,20 @@ def _scenario_rows(flat, lay, k):
          plan_local(flat, k, select="fused")),
         ("forced fused_scan (datastore exceeds one invocation)",
          plan_local(flat, k, select="fused_scan")),
+        ("forced approx / recall_target=0.9 (MXU partial-reduce tier)",
+         plan_local(flat, k, select="approx", recall_target=0.9)),
+        ("forced approx / recall_target=1.0 (exact pool, bit-identical "
+         "to fused)",
+         plan_local(flat, k, select="approx")),
         ("forced-plan override: layout off on a layout engine",
          plan_local(lay, k, force="layout=off")),
         ("IVF probe / bucket-contiguous layout",
          plan_index(dataclasses.replace(lay, index="kmeans"), k,
                     kind="kmeans", nprobe=2)),
+        ("IVF probe / approx select over the masked layout",
+         plan_index(dataclasses.replace(lay, index="kmeans"), k,
+                    kind="kmeans", nprobe=2, select="approx",
+                    recall_target=0.95)),
         ("IVF probe / reorder=False (gather fallback)",
          plan_index(dataclasses.replace(flat, index="kmeans"), k,
                     kind="kmeans", nprobe=2, use_layout=False)),
@@ -998,6 +1123,9 @@ def _scenario_rows(flat, lay, k):
         ("sharded / auto / exact (k_local=k): distributed counting select",
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",))),
+        ("sharded / approx: hist_merge over per-shard candidate pools",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",), select="approx", recall_target=0.95)),
         ("sharded / forced concat_sort merge (legacy fallback)",
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",), merge="concat_sort")),
@@ -1014,6 +1142,14 @@ def _scenario_rows(flat, lay, k):
                       reorder_local=True)),
         ("serving degradation rung: hamming-prefix probe, reduced nprobe",
          plan_index(lay, k, kind="hamming_prefix", nprobe=8)),
+        ("serving degradation rung: approx tier before retrieval_off",
+         dataclasses.replace(
+             plan_local(flat, k, select="approx", recall_target=0.9,
+                        layout_policy="off"),
+             reason="degradation ladder: when masked probing is exhausted "
+                    "the server downshifts to the compute-bound approx "
+                    "tier (bounded recall loss, recall_target=0.9) before "
+                    "dropping retrieval entirely")),
         ("mutable store: search over one installed epoch",
          dataclasses.replace(
              plan_local(lay, k),
@@ -1053,6 +1189,9 @@ def decision_table() -> str:
             s += f" / {p.select.method}, chunked"
         elif s == "fused_scan":
             s += ", chunked"
+        elif s == "approx":
+            s += (f" rt={p.select.recall_target:g}, MXU matmul + "
+                  f"partial reduce")
         else:
             s += ", single-shot"
         return s

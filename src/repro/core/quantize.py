@@ -43,8 +43,16 @@ def itq_train(x: jax.Array, bits: int, iters: int = 30, key=None) -> ITQParams:
 
 def itq_encode(x: jax.Array, p: ITQParams) -> jax.Array:
     """x: (..., dim) -> bits (..., code_bits) uint8 in {0,1}."""
-    v = (x.astype(jnp.float32) - p.mean) @ p.proj @ p.rot
-    return (v > 0).astype(jnp.uint8)
+    return (itq_project(x, p) > 0).astype(jnp.uint8)
+
+
+def itq_project(x: jax.Array, p: ITQParams) -> jax.Array:
+    """The CONTINUOUS rotated projection itq_encode signs: (..., dim) ->
+    (..., code_bits) f32. The approx tier's asymmetric scoring path keeps
+    queries at this float precision against the datastore's ±1 bit planes
+    (kernels/approx_select.asymmetric_topk) — better ranking fidelity than
+    query-side sign quantization at identical datastore bytes."""
+    return (x.astype(jnp.float32) - p.mean) @ p.proj @ p.rot
 
 
 def itq_objective(x: jax.Array, p: ITQParams) -> jax.Array:

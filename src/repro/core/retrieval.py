@@ -79,8 +79,9 @@ def synthetic_datastore(cfg: ModelConfig, n: Optional[int] = None, key=None) -> 
 
 def plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
                    mesh: Optional[Mesh] = None, axes: Sequence[str] = (),
-                   method: str = "xor",
-                   select: Optional[str] = None) -> plan_mod.QueryPlan:
+                   method: str = "xor", select: Optional[str] = None,
+                   recall_target: Optional[float] = None
+                   ) -> plan_mod.QueryPlan:
     """The QueryPlan ``knn_logits`` executes against this store.
 
     Select precedence: explicit ``select`` argument > ``rcfg.plan`` (when
@@ -100,6 +101,8 @@ def plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
     startup."""
     if select is None:
         select = rcfg.plan if rcfg.plan != "auto" else rcfg.select
+    if recall_target is None:
+        recall_target = rcfg.recall_target
     policy = "require" if rcfg.layout != "none" else "auto"
     n, w = store.codes.shape
     if mesh is not None and axes:
@@ -114,12 +117,14 @@ def plan_for_store(store: DataStore, rcfg: RetrievalConfig, q: int,
         return plan_mod.plan_sharded(
             stats, rcfg.k, axes=tuple(axes), k_local=rcfg.local_k,
             select=select, method=method, chunk=rcfg.chunk_size,
-            layout_policy=policy, force=rcfg.force_plan)
+            layout_policy=policy, recall_target=recall_target,
+            force=rcfg.force_plan)
     stats = plan_mod.stats_for(n, rcfg.code_bits, w, q, k=rcfg.k,
                                layout=store.layout)
     return plan_mod.plan_local(
         stats, rcfg.k, select=select, method=method, chunk=rcfg.chunk_size,
-        layout_policy=policy, force=rcfg.force_plan)
+        layout_policy=policy, recall_target=recall_target,
+        force=rcfg.force_plan)
 
 
 def log_store_plan(store: DataStore, rcfg: RetrievalConfig, q: int,
@@ -198,6 +203,7 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
                axes: Sequence[str] = (), method: str = "xor",
                temperature: float = 8.0,
                select: Optional[str] = None,
+               recall_target: Optional[float] = None,
                nprobe: int = 0,
                probe_positions: Optional[jax.Array] = None) -> jax.Array:
     """hidden: (Q, d_model) -> neighbor log-distribution (Q, vocab).
@@ -213,7 +219,9 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
 
     ``nprobe > 0`` with ``probe_positions`` (``probe_key_positions``)
     switches to the DEGRADED masked search the serving ladder downshifts
-    to: only the ``nprobe`` nearest hamming-prefix buckets are scanned."""
+    to: only the ``nprobe`` nearest hamming-prefix buckets are scanned.
+    ``recall_target`` overrides ``rcfg.recall_target`` for the approx tier
+    (the ladder's approx rung serves at a degraded target)."""
     q_codes = binary.pack_bits(quantize.itq_encode(hidden, store.itq))
     if nprobe > 0 and store.layout is not None and probe_positions is not None:
         p = degraded_plan_for_store(store, rcfg, hidden.shape[0], nprobe)
@@ -223,7 +231,8 @@ def knn_logits(store: DataStore, hidden: jax.Array, rcfg: RetrievalConfig,
                                       probe=probe)
     else:
         p = plan_for_store(store, rcfg, hidden.shape[0], mesh=mesh,
-                           axes=axes, method=method, select=select)
+                           axes=axes, method=method, select=select,
+                           recall_target=recall_target)
         if p.merge.kind == "sharded":
             dists, ids = plan_mod.execute(p, q_codes, codes=store.codes,
                                           mesh=mesh)

@@ -124,7 +124,9 @@ _SERVE_CACHE: dict = {}
 def make_serve_step(cfg: ModelConfig, mesh, max_len: int, *,
                     with_retrieval: Optional[bool] = None,
                     global_batch: Optional[int] = None,
-                    nprobe: int = 0, probe_positions=None):
+                    nprobe: int = 0, probe_positions=None,
+                    select: Optional[str] = None,
+                    recall_target: Optional[float] = None):
     """Returns (serve_fn, param_specs, state_specs).
 
     ``serve_fn(params, token (B,1), state, active (B,)[, store]) ->
@@ -132,7 +134,9 @@ def make_serve_step(cfg: ModelConfig, mesh, max_len: int, *,
     slot; the store argument exists iff retrieval is on. ``nprobe > 0``
     (with the store's hamming-prefix ``probe_positions``) builds the
     DEGRADED serving variant: masked IVF-style probe over the layout at
-    reduced nprobe instead of the full exact plan. ``global_batch`` is
+    reduced nprobe instead of the full exact plan; ``select="approx"`` +
+    ``recall_target`` builds the APPROX rung — the compute-bound MXU
+    partial-reduce tier at a bounded recall loss. ``global_batch`` is
     accepted for dry-run symmetry; shapes come from the operands.
     """
     if with_retrieval is None:
@@ -140,7 +144,9 @@ def make_serve_step(cfg: ModelConfig, mesh, max_len: int, *,
     key = None
     try:
         key = (cfg, mesh, int(max_len), bool(with_retrieval), int(nprobe),
-               id(probe_positions) if probe_positions is not None else None)
+               id(probe_positions) if probe_positions is not None else None,
+               select,
+               float(recall_target) if recall_target is not None else None)
         if key in _SERVE_CACHE:
             return _SERVE_CACHE[key]
     except TypeError:            # unhashable cfg/mesh: skip memoization
@@ -156,6 +162,7 @@ def make_serve_step(cfg: ModelConfig, mesh, max_len: int, *,
                 return_hidden=True)
             knn = retrieval_mod.knn_logits(
                 store, hidden[:, 0, :], rcfg, cfg.vocab_size,
+                select=select, recall_target=recall_target,
                 nprobe=nprobe, probe_positions=probe_positions)
             mixed = retrieval_mod.interpolate(logits[:, 0, :], knn,
                                               rcfg.interpolation)

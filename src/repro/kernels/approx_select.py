@@ -1,0 +1,432 @@
+"""Approximate peak-FLOP/s tier: MXU Hamming-as-matmul scoring + bucketed
+partial-reduce top-k with an analytical recall bound (TPU-KNN, PAPERS.md).
+
+The exact counting select is bandwidth-shaped — both passes stream every
+code word, so throughput pins to HBM, not compute. This tier trades a
+bounded amount of recall for compute-bound throughput:
+
+* **Scoring** — packed codes are bit-sliced into ±1 int8 planes so Hamming
+  distance becomes ONE matmul on the systolic array:
+  ``dist = (d - Q_planes @ D_planes^T) / 2`` via ``lax.dot_general`` with
+  ``preferred_element_type=int32`` (the TPU int8 MXU path; exact integer
+  distances, no popcount). An alternate asymmetric path keeps the query as
+  a FLOAT projection (``quantize.itq_project``) against the datastore's ±1
+  planes — better ranking fidelity for non-binary stores at the same
+  datastore bytes.
+* **Partial-reduce select** — the (Q, N) score matrix is never held: a
+  scan over ``bn``-row data blocks reduces each (Q, bn) score tile to its
+  top ``L`` candidates, and only the (Q, n_blocks·L) pool is merged (one
+  lexicographic (dist, id) sort — exactly ``counting_topk``'s ascending /
+  ties-by-index contract). ``L`` is sized from the TPU-KNN analytical
+  bound: under a uniform arrangement the i-th best item survives iff fewer
+  than L of the i better items share its block, so
+  ``E[recall@k] = mean_i P[Binom(i, 1/n_blocks) < L]`` — ``recall_target``
+  inverts that. ``recall_target=1.0`` keeps L = bn (the pool is every
+  row): bit-identical to the fused select by construction.
+* **Sharded merge** — ``approx_topk_sharded`` merges per-shard candidate
+  pools hist_merge-style: each shard histograms its pool's distances, one
+  ``psum`` derives the global radius r*, and winners scatter into disjoint
+  slots of the replicated (Q, k) output — O(Q·bins) counts + O(Q·k)
+  output across devices, never O(shards·pool) candidates.
+
+Block geometry comes from ``tuning.approx_blocks`` (measured autotune
+cache with seeded defaults, like the exact tier).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binary, topk
+from repro.kernels import tuning
+
+
+# ---------------------------------------------------------------------------
+# the analytical recall bound
+# ---------------------------------------------------------------------------
+
+def expected_recall(k: int, n_blocks: int, l: int) -> float:
+    """E[recall@k] keeping the best ``l`` of each of ``n_blocks`` equal
+    data blocks, under the TPU-KNN uniform-arrangement model: the i-th
+    best item (i = 0..k-1) is kept iff fewer than ``l`` of the i better
+    items land in its block — a binomial tail at p = 1/n_blocks. Host
+    math, exact."""
+    k = max(int(k), 1)
+    l = int(l)
+    if l <= 0:
+        return 0.0
+    n_blocks = max(int(n_blocks), 1)
+    if n_blocks == 1:
+        return min(l, k) / k
+    p = 1.0 / n_blocks
+    total = 0.0
+    for i in range(k):
+        surv = 0.0
+        for j in range(min(l, i + 1)):
+            surv += math.comb(i, j) * p ** j * (1.0 - p) ** (i - j)
+        total += min(surv, 1.0)
+    return total / k
+
+
+def l_for_recall(k: int, n_blocks: int, block_rows: int,
+                 recall_target: float) -> int:
+    """Smallest per-block candidate count L whose analytical expected
+    recall meets ``recall_target``. ``recall_target >= 1`` returns the
+    full block (the pool is every row — exact, bit-identical to the fused
+    counting select); L never needs to exceed k (at L = k the bound is
+    exactly 1)."""
+    block_rows = max(int(block_rows), 1)
+    if recall_target >= 1.0:
+        return block_rows
+    l = 1
+    cap = min(max(int(k), 1), block_rows)
+    while l < cap and expected_recall(k, n_blocks, l) < recall_target:
+        l += 1
+    return l
+
+
+# ---------------------------------------------------------------------------
+# MXU scoring: bit-sliced planes
+# ---------------------------------------------------------------------------
+
+def bit_planes(packed: jax.Array, d: int, signed: bool = True) -> jax.Array:
+    """Bit-slice packed codes into int8 planes: (..., W) uint32 ->
+    (..., d) int8 in {-1, +1} (``signed``) or {0, 1}."""
+    bits = binary.unpack_bits(packed, d).astype(jnp.int8)
+    return (2 * bits - 1).astype(jnp.int8) if signed else bits
+
+
+def hamming_scores_planes(q_planes: jax.Array, x_planes: jax.Array,
+                          d: int) -> jax.Array:
+    """Hamming distance as one int8 matmul: q (Q, d) ±1, x (N, d) ±1 ->
+    (Q, N) int32, exact. ``<±q, ±x> = d - 2·hamming``, and the int32
+    accumulation (``preferred_element_type``) keeps it exact for any d the
+    planes can hold."""
+    dot = jax.lax.dot_general(q_planes, x_planes, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (d - dot) >> 1
+
+
+def asymmetric_scores(v: jax.Array, x_planes: jax.Array) -> jax.Array:
+    """Asymmetric float/int8 scoring for non-binary stores: the query stays
+    the CONTINUOUS rotated projection (``quantize.itq_project`` — never
+    sign-quantized), scored against the datastore's ±1 planes. Returns
+    (Q, N) f32 inner products, descending = nearest; only the queries keep
+    float precision, the datastore stays at 1 bit/dim."""
+    dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+    return jax.lax.dot_general(v.astype(dt), x_planes.astype(dt),
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# the bucketed partial-reduce select
+# ---------------------------------------------------------------------------
+
+def _pool(q_packed: jax.Array, x_packed: jax.Array, bins: int, bn: int,
+          l: int, n_valid, block_mask: Optional[jax.Array]
+          ) -> Tuple[jax.Array, jax.Array]:
+    """The per-block partial reduce: scan ``bn``-row blocks, score each on
+    the MXU, keep the best ``l`` per block. Returns the candidate pool
+    (dists (Q, n_blocks·l) int32 in [0, bins], ``bins`` = invalid;
+    positions (Q, n_blocks·l) int32, invalid slots hold N). ``block_mask``
+    is an optional per-query (Q, n_blocks) enable mask — a zero block
+    contributes only sentinels for that query."""
+    N, W = x_packed.shape
+    Q = q_packed.shape[0]
+    d = bins - 1
+    n_blocks = -(-N // bn)
+    n_pad = n_blocks * bn
+    planes = bit_planes(x_packed, d)                       # (N, d) int8
+    if n_pad != N:
+        planes = jnp.pad(planes, ((0, n_pad - N), (0, 0)))
+    xb = planes.reshape(n_blocks, bn, d)
+    qpl = bit_planes(q_packed, d)                          # (Q, d) int8
+    nv = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
+    bm = None
+    if block_mask is not None:
+        bm = jnp.asarray(block_mask).astype(jnp.int32).T   # (n_blocks, Q)
+        assert bm.shape == (n_blocks, Q), (bm.shape, (n_blocks, Q))
+
+    def body(_, xs):
+        bi, xblk = xs[0], xs[1]
+        dist = jnp.minimum(hamming_scores_planes(qpl, xblk, d), bins - 1)
+        gid = bi * bn + jnp.arange(bn, dtype=jnp.int32)
+        ok = gid[None, :] < nv
+        if bm is not None:
+            ok = ok & (xs[2] > 0)[:, None]
+        dist = jnp.where(ok, dist, bins)
+        # ties by in-block index order (composite key), exactly like the
+        # counting selects — global order is restored at the merge
+        dd, ii = topk.composite_topk(dist, l, bins)
+        pos = jnp.where(dd < bins, bi * bn + ii, N)
+        return None, (dd, pos)
+
+    xs = (jnp.arange(n_blocks, dtype=jnp.int32), xb)
+    if bm is not None:
+        xs = xs + (bm,)
+    _, (dd, pos) = jax.lax.scan(body, None, xs)
+    dd = jnp.moveaxis(dd, 0, 1).reshape(Q, n_blocks * l)
+    pos = jnp.moveaxis(pos, 0, 1).reshape(Q, n_blocks * l)
+    return dd, pos
+
+
+def approx_topk(q_packed: jax.Array, x_packed: jax.Array, k: int, bins: int,
+                *, recall_target: float = 1.0,
+                n_valid: jax.Array | int | None = None,
+                block_mask: Optional[jax.Array] = None,
+                bn: Optional[int] = None, l: Optional[int] = None,
+                backend: str | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Bucketed partial-reduce approximate top-k.
+
+    q: (Q, W) uint32, x: (N, W) -> (dists (Q, k) ascending, positions
+    (Q, k)) with ``ops.hamming_topk``'s exact contract: distances clamped
+    to bins-1, ties broken by index order, rows beyond min(k, n_valid)
+    padded with (bins, N). The candidate pool keeps the best
+    ``l = l_for_recall(k, n_blocks, bn, recall_target)`` rows of every
+    ``bn``-row block; at ``recall_target=1.0`` the pool is every row and
+    the result is bit-identical to the fused/counting selects.
+
+    ``block_mask``: optional per-query (Q, ceil(N/bn)) enable mask (the
+    probed-layout contract at the approx tier's granularity)."""
+    N, W = x_packed.shape
+    Q = q_packed.shape[0]
+    k_k = min(k, N)
+    if k_k <= 0:
+        return (jnp.full((Q, k), bins, jnp.int32),
+                jnp.full((Q, k), N, jnp.int32))
+    if bn is None:
+        bn = tuning.approx_blocks(Q, N, W, backend=backend)
+    bn = max(min(int(bn), N + (-N) % 8 if N >= 8 else N), 1)
+    n_blocks = -(-N // bn)
+    if l is None:
+        l = l_for_recall(k_k, n_blocks, bn, recall_target)
+    l = max(min(int(l), bn), 1)
+
+    dd, pos = _pool(q_packed, x_packed, bins, bn, l, n_valid, block_mask)
+    # exact merge of the pool: one lexicographic (dist, id) sort == the
+    # counting selects' ascending / ties-by-index order; sentinels
+    # (bins, N) sort last by construction
+    dd, pos = jax.lax.sort((dd, pos), dimension=-1, num_keys=2)
+    C = dd.shape[1]
+    if C < k:
+        dd = jnp.concatenate(
+            [dd, jnp.full((Q, k - C), bins, jnp.int32)], axis=1)
+        pos = jnp.concatenate(
+            [pos, jnp.full((Q, k - C), N, jnp.int32)], axis=1)
+    return dd[:, :k], pos[:, :k]
+
+
+def masked_approx_topk(layout, q_packed: jax.Array, k: int, d: int,
+                       probe: Optional[jax.Array] = None,
+                       cand_ids: Optional[jax.Array] = None,
+                       recall_target: float = 1.0,
+                       bn: Optional[int] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Index-probed approximate select over a bucket-clustered layout.
+
+    Same candidate contract as ``layout_mod.masked_topk`` — probed bucket
+    ids / original candidate ids become a block enable mask over the
+    reordered codes — but at the approx tier's granularity: the mask is
+    PER QUERY (bq = 1, finer than the fused kernels' bq-grouped rows) at
+    ``bn = tuning.approx_blocks`` resolution, and the masked blocks feed
+    the partial-reduce select instead of the two-pass kernels. Returns
+    (dists, ORIGINAL ids) with -1 in sentinel slots."""
+    from repro.core import layout as layout_mod
+
+    Q, W = q_packed.shape
+    n = layout.n
+    bins = d + 1
+    if bn is None:
+        bn = tuning.approx_blocks(Q, n, W)
+    bn = max(min(int(bn), n), 1)
+    n_blocks = -(-n // bn)
+    mask = None
+    if probe is not None:
+        mask = layout_mod.probe_block_mask(layout, probe, 1, bn, Q, n_blocks)
+    if cand_ids is not None:
+        pmask = layout_mod.position_block_mask(layout, cand_ids, 1, bn,
+                                               Q, n_blocks)
+        mask = pmask if mask is None else jnp.maximum(mask, pmask)
+    dd, pos = approx_topk(q_packed, layout.codes, k, bins,
+                          recall_target=recall_target, bn=bn,
+                          block_mask=mask)
+    return dd, layout_mod.original_ids(layout, dd, pos, d)
+
+
+# ---------------------------------------------------------------------------
+# the sharded hist_merge-style candidate merge
+# ---------------------------------------------------------------------------
+
+def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
+                        bins: int, axis_names, *, n_shards: int,
+                        recall_target: float = 1.0,
+                        n_valid: jax.Array | None = None,
+                        id_base: jax.Array | None = None,
+                        n_total: jax.Array | int | None = None,
+                        perm: jax.Array | None = None,
+                        bn: Optional[int] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Distributed approximate select — hist_merge over per-shard candidate
+    POOLS instead of per-shard rows. Call INSIDE ``shard_map``; collectives
+    run over ``axis_names``.
+
+    Per shard: the partial reduce shrinks the local slice to n_blocks·L
+    candidates (L sized from the GLOBAL pool's block count, so the recall
+    bound covers the whole sharded store). Merge, exactly like
+    ``ops.hamming_topk_sharded``: (1) each shard histograms its pool's
+    distances — a partial histogram of the global candidate race; (2) one
+    ``psum`` merges them and the global radius r*, below-count and emit
+    count derive via the SAME ``_radius_from_cum``; (3) a (Q, 2)-per-shard
+    all-gather turns local below/tie counts into exclusive-scan slot bases;
+    (4) winners scatter into disjoint slots of the replicated (Q, k)
+    output and one ``psum`` assembles it. Cross-device traffic is
+    O(Q·bins) + O(Q·n_shards) + O(Q·k) — never the pooled candidates.
+
+    At ``recall_target=1.0`` the pool is every row: bit-identical to
+    ``ops.hamming_topk_sharded`` / the single-device fused select.
+    ``n_valid``/``id_base``/``n_total``: the uneven-shard contract of
+    ``ops.hamming_topk_sharded``. ``perm``: this shard's local layout
+    permutation (winners report original local ids; in-shard tie order
+    then follows (dist, original id), the usual layout report-order
+    freedom)."""
+    from repro.kernels import ops
+
+    axes = tuple(axis_names)
+    Q, W = q_packed.shape
+    n_loc = x_local.shape[0]
+    k_k = min(k, n_shards * n_loc)
+    if k_k <= 0:
+        return (jnp.full((Q, k), bins, jnp.int32),
+                jnp.full((Q, k), 0, jnp.int32))
+
+    flat = jnp.zeros((), jnp.int32)
+    for a in axes:
+        flat = flat * jax.lax.psum(jnp.int32(1), a) + jax.lax.axis_index(a)
+    if n_valid is None:
+        nv = jnp.int32(n_loc)
+        ib = (flat * n_loc).astype(jnp.int32) if id_base is None else id_base
+        nt = n_shards * n_loc if n_total is None else n_total
+    else:
+        nv = jnp.asarray(n_valid, jnp.int32).reshape(())
+        ib, nt = id_base, n_total
+        if ib is None or nt is None:
+            nv_all = jax.lax.all_gather(nv, axes, tiled=False)
+            nv_all = nv_all.reshape(n_shards)
+            csum = jnp.cumsum(nv_all)
+            ib = csum[flat] - nv_all[flat] if ib is None else ib
+            nt = csum[-1] if nt is None else nt
+    ib = jnp.asarray(ib, jnp.int32)
+    nt = jnp.asarray(nt, jnp.int32)
+
+    if bn is None:
+        bn = tuning.approx_blocks(Q, n_loc, W)
+    bn = max(min(int(bn), n_loc), 1)
+    n_blocks = -(-n_loc // bn)
+    l = max(min(l_for_recall(k_k, n_shards * n_blocks, bn, recall_target),
+                bn), 1)
+
+    # local pool: distances + GLOBAL ids (sentinels at the global total)
+    dd, pos = _pool(q_packed, x_local, bins, bn, l, nv, None)
+    if perm is not None:
+        perm = jnp.asarray(perm, jnp.int32)
+        pos = jnp.where(pos < n_loc, perm[jnp.minimum(pos, n_loc - 1)], pos)
+    gid = jnp.where(dd < bins, pos + ib, nt)
+
+    # (1)+(2): the candidate-pool histogram race, merged through one psum
+    rows = jnp.arange(Q)[:, None]
+    hist_loc = jnp.zeros((Q, bins), jnp.int32).at[
+        rows, jnp.clip(dd, 0, bins - 1)].add((dd < bins).astype(jnp.int32))
+    hist_glob = jax.lax.psum(hist_loc, axes)
+    cum_g = jnp.cumsum(hist_glob, axis=-1)
+    _, r_star, n_lt, n_emit = ops._radius_from_cum(cum_g, k_k)
+
+    # (3): exclusive-scan slot bases from the tiny (Q, 2) per-shard counts
+    gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
+    cum_l = jnp.cumsum(hist_loc, axis=-1)
+    l_lt = jnp.where(r_star > 0, gather(cum_l, jnp.maximum(r_star - 1, 0)), 0)
+    l_tie = gather(hist_loc, r_star)
+    counts = jnp.stack([l_lt, l_tie], axis=-1)
+    g_counts = jax.lax.all_gather(counts, axes, tiled=False)
+    g_counts = g_counts.reshape(n_shards, Q, 2)
+    before = (jnp.arange(n_shards, dtype=jnp.int32) < flat)[:, None]
+    base_lt = jnp.sum(jnp.where(before, g_counts[:, :, 0], 0), axis=0)
+    base_tie = n_lt + jnp.sum(jnp.where(before, g_counts[:, :, 1], 0), axis=0)
+
+    # (4): emit in (dist, id) order into this shard's disjoint slots; the
+    # +1 offset makes 0 the "untouched" marker the psum preserves
+    sd, si = jax.lax.sort((dd, gid), dimension=-1, num_keys=2)
+    lt = sd < r_star[:, None]
+    tie = sd == r_star[:, None]
+    rank_lt = jnp.cumsum(lt.astype(jnp.int32), axis=-1) - 1
+    rank_tie = jnp.cumsum(tie.astype(jnp.int32), axis=-1) - 1
+    slot = jnp.where(lt, base_lt[:, None] + rank_lt,
+                     jnp.where(tie, base_tie[:, None] + rank_tie, k_k))
+    slot = jnp.where(slot < k_k, slot, k_k)                 # drop overflow
+    od = jnp.zeros((Q, k_k), jnp.int32).at[rows, slot].add(
+        jnp.where(slot < k_k, sd + 1, 0), mode="drop")
+    oi = jnp.zeros((Q, k_k), jnp.int32).at[rows, slot].add(
+        jnp.where(slot < k_k, si + 1, 0), mode="drop")
+    od = jax.lax.psum(od, axes) - 1
+    oi = jax.lax.psum(oi, axes) - 1
+    return ops._finalize_slots(od, oi, n_emit, k, k_k, bins, nt)
+
+
+# ---------------------------------------------------------------------------
+# asymmetric top-k (non-binary stores)
+# ---------------------------------------------------------------------------
+
+def asymmetric_topk(v: jax.Array, x_packed: jax.Array, k: int, d: int, *,
+                    recall_target: float = 1.0, bn: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Approximate top-k by MAXIMUM asymmetric score: the float query
+    projection v (Q, d) against packed ±1 codes. Same partial-reduce shape
+    as ``approx_topk`` but over float scores (per-block ``lax.top_k``,
+    final exact top-k over the pool). Returns (scores (Q, k) descending,
+    ids (Q, k)); at recall_target=1.0 equals the exact argmax ranking up
+    to float ties."""
+    N, W = x_packed.shape
+    Q = v.shape[0]
+    k_k = min(k, N)
+    if bn is None:
+        bn = tuning.approx_blocks(Q, N, W)
+    bn = max(min(int(bn), N), 1)
+    n_blocks = -(-N // bn)
+    l = max(min(l_for_recall(k_k, n_blocks, bn, recall_target), bn), 1)
+
+    n_pad = n_blocks * bn
+    planes = bit_planes(x_packed, d)
+    if n_pad != N:
+        planes = jnp.pad(planes, ((0, n_pad - N), (0, 0)))
+    xb = planes.reshape(n_blocks, bn, d)
+    neg_inf = jnp.float32(-jnp.inf)
+
+    def body(_, xs):
+        bi, xblk = xs
+        s = asymmetric_scores(v, xblk)                      # (Q, bn) f32
+        gid = bi * bn + jnp.arange(bn, dtype=jnp.int32)
+        s = jnp.where(gid[None, :] < N, s, neg_inf)
+        sv, si = jax.lax.top_k(s, l)
+        return None, (sv, jnp.where(sv > neg_inf, bi * bn + si, N))
+
+    _, (sv, si) = jax.lax.scan(
+        body, None, (jnp.arange(n_blocks, dtype=jnp.int32), xb))
+    sv = jnp.moveaxis(sv, 0, 1).reshape(Q, n_blocks * l)
+    si = jnp.moveaxis(si, 0, 1).reshape(Q, n_blocks * l)
+    out_v, oi = jax.lax.top_k(sv, k_k)
+    out_i = jnp.take_along_axis(si, oi, axis=-1)
+    if k_k < k:
+        out_v = jnp.concatenate(
+            [out_v, jnp.full((Q, k - k_k), neg_inf)], axis=1)
+        out_i = jnp.concatenate(
+            [out_i, jnp.full((Q, k - k_k), N, jnp.int32)], axis=1)
+    return out_v, out_i
+
+
+__all__ = ["approx_topk", "approx_topk_sharded", "asymmetric_scores",
+           "asymmetric_topk", "bit_planes", "expected_recall",
+           "hamming_scores_planes", "l_for_recall", "masked_approx_topk"]

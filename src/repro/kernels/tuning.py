@@ -1,9 +1,22 @@
-"""Block-shape heuristics shared by the Hamming kernels (see DESIGN.md).
+"""Block-shape heuristics + the measured autotune cache (see DESIGN.md).
 
 One table instead of per-call-site hardcoded defaults: both passes of the
-fused top-k (``hamming_hist_pallas`` / ``hamming_emit_pallas``) and the
-materializing distance kernel ask here for (bq, bn, sub) given the problem
-shape and backend.
+fused top-k (``hamming_hist_pallas`` / ``hamming_emit_pallas``), the
+approximate partial-reduce select (``kernels/approx_select.py``) and the
+materializing distance kernel ask here for their block shapes given the
+problem shape and backend.
+
+Resolution order is **measured beats default**: every lookup first consults
+the :class:`AutotuneCache` — a small JSON-on-disk store of per-(backend,
+kind, geometry-bucket) timings written by :func:`measure` — and only falls
+back to the static heuristics below when no measurement exists. The static
+heuristics ARE the seeded defaults: with an empty cache every shape is a
+pure function of the inputs, so tests and CI stay deterministic (nothing
+here ever times code implicitly; ``measure`` runs only when a caller
+explicitly invokes it, and accepts an injectable timer so even the
+measuring path is testable without wall-clock assertions).
+``cost_hints`` reports which side won as ``hint_source`` ("measured" |
+"default"), which ``QueryPlan.explain()`` surfaces.
 
 The governing budget on TPU is VMEM: each grid cell holds the code tiles
 (bq + bn) * W words plus the kernels' widest intermediate — the
@@ -23,6 +36,10 @@ summary footprint and per-query-block grid length stay bounded instead of
 scaling linearly with the datastore.
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import jax
 
@@ -51,6 +68,183 @@ def _round_down(n: int, m: int) -> int:
     return max(m, n // m * m)
 
 
+# ---------------------------------------------------------------------------
+# the measured autotune cache
+# ---------------------------------------------------------------------------
+
+def _pow2_bucket(n: int) -> int:
+    """Geometry bucketing for cache keys: round up to a power of two, so
+    one measurement covers the whole bucket instead of every exact shape."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+class AutotuneCache:
+    """Per-(backend, kind, geometry-bucket) measured block shapes.
+
+    Entries live in one JSON file (``path``; default from the
+    ``REPRO_AUTOTUNE_CACHE`` env var, empty -> in-memory only) shaped
+    ``{key: {"bq":…,"bn":…,"sub":…,"us":…}}``. A corrupt or missing file
+    degrades to an empty cache — defaults always work. Lookups sanitize
+    entries back onto the kernels' tiling constraints (bq/sub sublane
+    multiples, bn a sub multiple) so a hand-edited or stale file can bias
+    performance but never produce an invalid grid."""
+
+    def __init__(self, path: str | None = None):
+        self.path = (os.environ.get("REPRO_AUTOTUNE_CACHE", "")
+                     if path is None else path)
+        self._entries: dict[str, dict] = {}
+        self._loaded = False
+
+    # -- persistence -------------------------------------------------------
+
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        if not self.path or not os.path.exists(self.path):
+            return
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                self._entries.update(
+                    {k: v for k, v in data.items() if isinstance(v, dict)})
+        except (OSError, ValueError):
+            pass                     # corrupt cache == empty cache
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # -- lookup ------------------------------------------------------------
+
+    @staticmethod
+    def key(backend: str, kind: str, Q: int, N: int, W: int,
+            lanes: int) -> str:
+        return (f"{backend}/{kind}/q{_pow2_bucket(Q)}"
+                f"n{_pow2_bucket(N)}w{max(int(W), 1)}l{_pow2_bucket(lanes)}")
+
+    def get(self, backend: str, kind: str, Q: int, N: int, W: int,
+            lanes: int) -> dict | None:
+        self._load()
+        return self._entries.get(self.key(backend, kind, Q, N, W, lanes))
+
+    def put(self, backend: str, kind: str, Q: int, N: int, W: int,
+            lanes: int, entry: dict, persist: bool = True) -> None:
+        self._load()
+        self._entries[self.key(backend, kind, Q, N, W, lanes)] = dict(entry)
+        if persist:
+            self.save()
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._loaded = True
+
+    def __len__(self) -> int:
+        self._load()
+        return len(self._entries)
+
+
+_CACHE = AutotuneCache()
+
+
+def autotune_cache() -> AutotuneCache:
+    return _CACHE
+
+
+def configure(path: str | None = None) -> AutotuneCache:
+    """Rebind the process-wide cache (tests point it at a tmp file; ""
+    keeps it purely in-memory). Returns the new cache."""
+    global _CACHE
+    _CACHE = AutotuneCache("" if path is None else path)
+    return _CACHE
+
+
+def _sane_topk_entry(entry: dict, N: int) -> tuple[int, int, int] | None:
+    """Sanitize a measured (bq, bn, sub) back onto the kernels' tiling
+    constraints; None when the entry is not a usable shape."""
+    try:
+        bq, bn, sub = int(entry["bq"]), int(entry["bn"]), int(entry["sub"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if min(bq, bn, sub) <= 0:
+        return None
+    bq = _round_up(bq, _SUBLANE)
+    sub = min(_round_up(sub, _SUBLANE), 256)
+    bn = _round_up(bn, sub)
+    return bq, bn, sub
+
+
+def hint_source(backend: str, kind: str, Q: int, N: int, W: int,
+                lanes: int) -> str:
+    """"measured" when the cache holds a usable entry for this geometry
+    bucket, else "default" (the static heuristics)."""
+    ent = _CACHE.get(backend, kind, Q, N, W, lanes)
+    if kind == "topk":
+        return "measured" if (ent is not None
+                              and _sane_topk_entry(ent, N)) else "default"
+    return "measured" if (ent is not None and ent.get("bn")) else "default"
+
+
+def measure(runner, candidates, *, backend: str, kind: str, Q: int, N: int,
+            W: int, lanes: int, reps: int = 3, timer=None,
+            persist: bool = True) -> dict:
+    """Time ``runner(candidate)`` over ``candidates`` and cache the winner.
+
+    ``runner`` executes one kernel call for a candidate shape (the caller
+    blocks on the result); ``timer`` defaults to ``time.perf_counter`` and
+    is injectable so tests measure with a fake clock — deterministic, no
+    wall-time assertions. Each candidate gets one warm-up call (compile)
+    plus ``reps`` timed calls; the best median wins. Returns the cached
+    entry. Nothing in this module calls ``measure`` implicitly."""
+    timer = time.perf_counter if timer is None else timer
+    best = None
+    for cand in candidates:
+        try:
+            runner(cand)                       # warm-up / compile
+            times = []
+            for _ in range(max(reps, 1)):
+                t0 = timer()
+                runner(cand)
+                times.append(timer() - t0)
+            us = sorted(times)[len(times) // 2] * 1e6
+        except Exception:                      # noqa: BLE001 — an invalid
+            continue                           # candidate just loses
+        if best is None or us < best[0]:
+            best = (us, cand)
+    if best is None:
+        raise ValueError("no candidate shape ran successfully")
+    us, cand = best
+    entry = dict(cand)
+    entry["us"] = round(us, 3)
+    _CACHE.put(backend, kind, Q, N, W, lanes, entry, persist=persist)
+    return entry
+
+
+def topk_candidates(Q: int, N: int, W: int, lanes: int,
+                    backend: str | None = None) -> list[dict]:
+    """Candidate (bq, bn, sub) shapes for ``measure`` around the static
+    heuristic: the default itself plus halved/doubled bn and sub variants,
+    sanitized and deduplicated."""
+    backend = backend or jax.default_backend()
+    bq, bn, sub = _topk_blocks_default(Q, N, W, lanes, backend)
+    raw = [(bq, bn, sub), (bq, bn * 2, sub), (bq, max(bn // 2, sub), sub),
+           (bq, bn, max(sub // 2, _SUBLANE)),
+           (max(bq // 2, _SUBLANE), bn, sub)]
+    out, seen = [], set()
+    for cand in raw:
+        ok = _sane_topk_entry(dict(zip(("bq", "bn", "sub"), cand)), N)
+        if ok and ok not in seen:
+            seen.add(ok)
+            out.append(dict(zip(("bq", "bn", "sub"), ok)))
+    return out
+
+
 def topk_blocks(Q: int, N: int, W: int, lanes: int,
                 backend: str | None = None) -> tuple[int, int, int]:
     """(bq, bn, sub) for the two-pass counting-select kernels.
@@ -60,8 +254,23 @@ def topk_blocks(Q: int, N: int, W: int, lanes: int,
     the SAME (bq, bn, sub) (use lanes=max(bins, k)) so they stream the
     dataset in identical tiles — required for the block-min summary, whose
     (Q/bq, N/bn) tiling must mean the same tiles in both passes.
+
+    A measured :class:`AutotuneCache` entry for this (backend, geometry
+    bucket) overrides the static heuristic; with an empty cache the result
+    is the deterministic seeded default below.
     """
     backend = backend or jax.default_backend()
+    ent = _CACHE.get(backend, "topk", Q, N, W, lanes)
+    if ent is not None:
+        sane = _sane_topk_entry(ent, N)
+        if sane is not None:
+            return sane
+    return _topk_blocks_default(Q, N, W, lanes, backend)
+
+
+def _topk_blocks_default(Q: int, N: int, W: int, lanes: int,
+                         backend: str) -> tuple[int, int, int]:
+    """The static VMEM heuristic — the cache's seeded default."""
     budget = _ONEHOT_BYTES.get(backend, 1 << 20)
 
     bq = min(_round_up(Q, _SUBLANE), 64 if backend == "tpu" else 32)
@@ -109,6 +318,28 @@ def layout_blocks(Q: int, N: int, W: int, lanes: int, bucket_rows: int,
     return bq, bn, sub
 
 
+def approx_blocks(Q: int, N: int, W: int,
+                  backend: str | None = None) -> int:
+    """Data-block rows ``bn`` for the approximate partial-reduce select
+    (``kernels/approx_select.py``): each block's (Q, bn) MXU score tile is
+    reduced to L candidates before the merge. Bigger blocks mean fewer,
+    larger matmuls (and a higher recall at the same L — fewer chances for
+    true neighbors to collide); smaller blocks bound the score tile. The
+    seeded default targets ~32 blocks with a lane-aligned floor; a measured
+    cache entry (kind="approx") overrides it."""
+    backend = backend or jax.default_backend()
+    ent = _CACHE.get(backend, "approx", Q, N, W, 1)
+    if ent is not None:
+        try:
+            bn = int(ent["bn"])
+        except (KeyError, TypeError, ValueError):
+            bn = 0
+        if bn > 0:
+            return min(_round_up(bn, _LANE), 1 << 16)
+    bn = _round_up(max(-(-max(N, 1) // 32), _LANE), _LANE)
+    return min(bn, 8192)
+
+
 def cost_hints(Q: int, N: int, W: int, lanes: int, *, path: str = "fused",
                chunk: int = 0, bucket_rows: int = 0,
                backend: str | None = None) -> dict:
@@ -137,6 +368,7 @@ def cost_hints(Q: int, N: int, W: int, lanes: int, *, path: str = "fused",
             "onehot_bytes": 4 * bq * sub * max(lanes, 1),
             "summary_bytes": 4 * grid[0] * grid[1],
             "hist_bytes": 4 * Q * max(lanes, 1),
+            "hint_source": hint_source(backend, "topk", Q, n_eff, W, lanes),
         }
         if path == "fused_scan":
             hints["n_scan_steps"] = -(-N // max(n_eff, 1))
@@ -147,6 +379,7 @@ def cost_hints(Q: int, N: int, W: int, lanes: int, *, path: str = "fused",
         "codes_bytes_streamed": 4 * W * N,
         "distance_tile_bytes": 4 * Q * c,
         "distance_total_bytes": 4 * Q * N,
+        "hint_source": "default",
     }
 
 

@@ -98,6 +98,9 @@ class Rung:
     name: str
     retrieval: bool
     nprobe: int = 0             # 0 with retrieval -> the full exact plan
+    select: str = ""            # "" -> the config's plan; "approx" -> the
+                                # compute-bound MXU partial-reduce tier
+    recall_target: float = 1.0  # approx rung only: degraded recall floor
 
 
 @dataclasses.dataclass
@@ -241,6 +244,14 @@ class Server:
                                  reverse=True)
                 rungs += [Rung(f"probe{n}", True, n)
                           for n in nprobes if n < B]
+        if self.policy is not None:
+            # the last rung that still retrieves: the compute-bound approx
+            # tier at a bounded recall loss — cheaper than any masked probe
+            # (no candidate re-streaming, one matmul + tiny pool merge) but
+            # still a real neighbor distribution, so load has one more
+            # stop before retrieval quality drops to zero
+            rungs.append(Rung("approx", True, 0, select="approx",
+                              recall_target=0.9))
         rungs.append(Rung("retrieval_off", False, 0))
         return rungs
 
@@ -249,13 +260,20 @@ class Server:
             fn, _, _ = steps_mod.make_serve_step(
                 self.cfg, self.mesh, self.max_len,
                 with_retrieval=r.retrieval, nprobe=r.nprobe,
-                probe_positions=(self._probe_positions if r.nprobe else None))
+                probe_positions=(self._probe_positions if r.nprobe else None),
+                select=r.select or None,
+                recall_target=(r.recall_target if r.select == "approx"
+                               else None))
             self._fns[r] = fn
         return self._fns[r]
 
     def _rung_plan_str(self, r: Rung) -> str:
         if not r.retrieval:
             return "retrieval_off"
+        if r.select == "approx":
+            return retrieval_mod.plan_for_store(
+                self.store, self.cfg.retrieval, self.max_batch,
+                select="approx", recall_target=r.recall_target).compact()
         if r.nprobe:
             return retrieval_mod.degraded_plan_for_store(
                 self.store, self.cfg.retrieval, self.max_batch,

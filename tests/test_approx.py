@@ -1,0 +1,450 @@
+"""Approximate peak-FLOP/s tier (kernels/approx_select.py + the measured
+autotune cache in kernels/tuning.py).
+
+Pins: (a) the MXU bit-plane scoring is EXACT (matmul Hamming == popcount
+Hamming); (b) at recall_target=1.0 the partial-reduce select is
+bit-identical to the fused/counting contract (dists AND ids, n_valid and
+block-mask edges included); (c) at recall_target<1 the measured recall
+meets the analytical bound's target on seeded data; (d) the sharded
+candidate-pool hist merge matches ops.hamming_topk_sharded at rt=1.0;
+(e) the autotune cache is deterministic under tests — seeded defaults with
+an empty cache, measured-beats-default with a fake timer, never a
+wall-clock assertion.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binary, layout as layout_mod, plan, quantize, topk
+from repro.kernels import approx_select as ax, ops, tuning
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    """Every test sees an empty in-memory autotune cache (seeded defaults)
+    and leaves no state behind."""
+    tuning.configure("")
+    yield
+    tuning.configure("")
+
+
+def _codes(seed, n, q, d):
+    rng = np.random.default_rng(seed)
+    xb = jnp.asarray(rng.integers(0, 2, (n, d)), jnp.uint8)
+    qb = jnp.asarray(rng.integers(0, 2, (q, d)), jnp.uint8)
+    return binary.pack_bits(xb), binary.pack_bits(qb), xb, qb
+
+
+# ---------------------------------------------------------------------------
+# MXU scoring: bit planes
+# ---------------------------------------------------------------------------
+
+def test_plane_scores_equal_popcount_hamming():
+    xp, qp, xb, qb = _codes(0, 300, 9, 96)
+    got = ax.hamming_scores_planes(ax.bit_planes(qp, 96),
+                                   ax.bit_planes(xp, 96), 96)
+    ref = binary.hamming_ref(qb, xb)
+    assert got.dtype == jnp.int32
+    assert (np.asarray(got) == np.asarray(ref)).all()
+
+
+def test_recall_bound_math():
+    # L = k -> certain recall; L = 0 -> none; monotone in L and in blocks
+    assert ax.expected_recall(10, 8, 10) == 1.0
+    assert ax.expected_recall(10, 8, 0) == 0.0
+    rs = [ax.expected_recall(16, 16, l) for l in range(1, 8)]
+    assert all(a < b for a, b in zip(rs, rs[1:]))
+    assert ax.expected_recall(16, 32, 2) > ax.expected_recall(16, 4, 2)
+    # one block holds everything: recall = min(l, k)/k
+    assert ax.expected_recall(10, 1, 4) == pytest.approx(0.4)
+    # the inverse: smallest L meeting the target, full block at rt=1
+    l = ax.l_for_recall(16, 16, 64, 0.9)
+    assert ax.expected_recall(16, 16, l) >= 0.9
+    assert l == 1 or ax.expected_recall(16, 16, l - 1) < 0.9
+    assert ax.l_for_recall(16, 16, 64, 1.0) == 64
+
+
+# ---------------------------------------------------------------------------
+# the partial-reduce select: exactness edges
+# ---------------------------------------------------------------------------
+
+def test_bit_identity_to_fused_at_full_recall():
+    n, q, d, k = 700, 7, 64, 11
+    xp, qp, _, _ = _codes(1, n, q, d)
+    rd, ri = ops.hamming_topk(qp, xp, k, d + 1)
+    for bn in (64, 96, 512, 1024):      # incl. bn > N and N % bn != 0
+        dd, ii = ax.approx_topk(qp, xp, k, d + 1, recall_target=1.0, bn=bn)
+        assert (np.asarray(dd) == np.asarray(rd)).all(), bn
+        assert (np.asarray(ii) == np.asarray(ri)).all(), bn
+
+
+def test_n_valid_and_k_gt_n_edges():
+    n, q, d, k = 256, 5, 64, 12
+    xp, qp, _, _ = _codes(2, n, q, d)
+    for nv in (3, 17, n):               # k > n_valid included
+        rd, ri = ops.hamming_topk(qp, xp, k, d + 1, n_valid=nv)
+        dd, ii = ax.approx_topk(qp, xp, k, d + 1, recall_target=1.0,
+                                bn=64, n_valid=nv)
+        assert (np.asarray(dd) == np.asarray(rd)).all(), nv
+        assert (np.asarray(ii) == np.asarray(ri)).all(), nv
+    # k > N entirely: all-sentinel tail, never an exception
+    dd, ii = ax.approx_topk(qp, xp[:4], 9, d + 1, recall_target=1.0)
+    assert (np.asarray(dd[:, 4:]) == d + 1).all()
+    assert (np.asarray(ii[:, 4:]) == 4).all()
+
+
+def test_block_mask_and_all_masked_edges():
+    n, q, d, k, bn = 320, 6, 64, 8, 64
+    xp, qp, xb, qb = _codes(3, n, q, d)
+    nb = -(-n // bn)
+    rng = np.random.default_rng(7)
+    bm = jnp.asarray(rng.integers(0, 2, (q, nb)), jnp.int32)
+    dd, ii = ax.approx_topk(qp, xp, k, d + 1, recall_target=1.0, bn=bn,
+                            block_mask=bm)
+    # reference: distances of disabled rows forced past the clamp
+    dist = binary.hamming_ref(qb, xb)
+    rowmask = np.repeat(np.asarray(bm), bn, axis=1)[:, :n]
+    dm = jnp.asarray(np.where(rowmask > 0, np.asarray(dist), d + 1))
+    rd, ri = topk.composite_topk(dm, k, d + 1)
+    ri = jnp.where(rd <= d, ri, n)
+    assert (np.asarray(dd) == np.asarray(rd)).all()
+    assert (np.asarray(ii) == np.asarray(ri)).all()
+    # every block masked for every query: pure sentinels
+    dd0, ii0 = ax.approx_topk(qp, xp, k, d + 1, recall_target=1.0, bn=bn,
+                              block_mask=jnp.zeros((q, nb), jnp.int32))
+    assert (np.asarray(dd0) == d + 1).all() and (np.asarray(ii0) == n).all()
+
+
+def test_recall_meets_target_on_seeded_data():
+    """The analytical bound sizes L; measured DISTANCE recall (an approx
+    hit counts when its distance is within the exact k-th distance — tie
+    robust) must meet the target on every seeded draw."""
+    n, q, d, k, bn = 2048, 16, 64, 10, 128
+    for target in (0.9, 0.99):
+        recalls = []
+        for seed in range(5):
+            xp, qp, _, _ = _codes(seed, n, q, d)
+            rd, _ = ops.hamming_topk(qp, xp, k, d + 1)
+            dd, _ = ax.approx_topk(qp, xp, k, d + 1, recall_target=target,
+                                   bn=bn)
+            kth = np.asarray(rd)[:, k - 1:k]
+            recalls.append(float((np.asarray(dd) <= kth).mean()))
+        assert min(recalls) >= target - 0.02, (target, recalls)
+        assert float(np.mean(recalls)) >= target, (target, recalls)
+
+
+def test_masked_approx_matches_masked_reference():
+    """Index-probed approx at rt=1.0 == a composite select over exactly
+    the rows the per-query block mask enables (original-id mapping and -1
+    sentinels included)."""
+    n, q, d, k, bn = 512, 5, 64, 9, 64
+    xp, qp, _, _ = _codes(4, n, q, d)
+    lay = layout_mod.build_layout(xp, d, n_buckets=8)
+    rng = np.random.default_rng(11)
+    probe = jnp.asarray(rng.integers(0, 8, (q, 2)), jnp.int32)
+    dd, ii = ax.masked_approx_topk(lay, qp, k, d, probe=probe,
+                                   recall_target=1.0, bn=bn)
+    nb = -(-n // bn)
+    mask = layout_mod.probe_block_mask(lay, probe, 1, bn, q, nb)
+    dist = np.asarray(binary.hamming_xor(qp, lay.codes))
+    rowmask = np.repeat(np.asarray(mask), bn, axis=1)[:, :n]
+    dm = jnp.asarray(np.where(rowmask > 0, dist, d + 1))
+    rd, rpos = topk.composite_topk(dm, k, d + 1)
+    rids = layout_mod.original_ids(lay, jnp.minimum(rd, d + 1),
+                                   jnp.where(rd <= d, rpos, n), d)
+    assert (np.asarray(dd) == np.asarray(jnp.minimum(rd, d + 1))).all()
+    assert (np.asarray(ii) == np.asarray(rids)).all()
+
+
+def test_asymmetric_scores_exact_and_topk():
+    """The float-query/int8-datastore path: scores equal the dense float
+    product against ±1 planes; at rt=1.0 the select equals exact top-k."""
+    n, q, d, k = 400, 6, 64, 7
+    xp, _, _, _ = _codes(5, n, q, d)
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    planes = ax.bit_planes(xp, d)
+    full = np.asarray(v) @ np.asarray(planes, np.float32).T
+    got = ax.asymmetric_scores(v, planes)
+    assert np.allclose(np.asarray(got), full, atol=1e-4)
+    sv, si = ax.asymmetric_topk(v, xp, k, d, recall_target=1.0, bn=128)
+    rv, _ = jax.lax.top_k(jnp.asarray(full), k)
+    assert np.allclose(np.asarray(sv), np.asarray(rv), atol=1e-4)
+    # itq_project is the continuous pre-sign value itq_encode thresholds
+    p = quantize.ITQParams(mean=jnp.zeros((d,), jnp.float32),
+                           proj=jnp.eye(d, d, dtype=jnp.float32),
+                           rot=jnp.eye(d, dtype=jnp.float32))
+    h = jnp.asarray(rng.normal(size=(3, d)), jnp.float32)
+    assert (np.asarray(quantize.itq_encode(h, p))
+            == (np.asarray(quantize.itq_project(h, p)) > 0)).all()
+
+
+# ---------------------------------------------------------------------------
+# planner integration
+# ---------------------------------------------------------------------------
+
+def test_plan_executes_approx_identically_at_full_recall():
+    n, q, d, k = 900, 6, 64, 8
+    xp, qp, _, _ = _codes(6, n, q, d)
+    stats = plan.stats_of(xp, qp, d)
+    pa = plan.plan_local(stats, k, select="approx")
+    pf = plan.plan_local(stats, k, select="fused")
+    ad, ai = plan.execute(pa, qp, codes=xp)
+    fd, fi = plan.execute(pf, qp, codes=xp)
+    assert (np.asarray(ad) == np.asarray(fd)).all()
+    assert (np.asarray(ai) == np.asarray(fi)).all()
+    assert pa.compact() == "probe:none|cand:full|select:approx@r1|merge:none"
+
+
+def test_plan_explain_reports_recall_and_flops():
+    stats = plan.StoreStats(n=1 << 16, d=128, w=4, q=64, backend="cpu")
+    p = plan.plan_local(stats, 16, select="approx", recall_target=0.9)
+    g = p.explain()["geometry"]
+    assert g["kind"] == "approx"
+    assert g["recall_target"] == 0.9
+    assert g["predicted_recall"] >= 0.9
+    assert g["cand_per_query"] == g["n_blocks"] * g["l_per_block"]
+    assert g["scores_flops"] == 2 * 64 * (1 << 16) * 128
+    assert g["flops_per_byte"] > 1
+    assert g["hint_source"] == "default"
+    assert "@r0.9" in p.compact()
+    # rt=1.0 predicts exactly 1 and keeps the full block
+    p1 = plan.plan_local(stats, 16, select="approx")
+    g1 = p1.explain()["geometry"]
+    assert g1["predicted_recall"] == 1.0 and g1["l_per_block"] == g1["bn"]
+
+
+def test_force_keys_and_invariants():
+    stats = plan.StoreStats(n=1 << 14, d=64, w=2, q=32, backend="cpu")
+    p = plan.plan_local(stats, 8, force="select=approx,recall_target=0.85")
+    assert p.select.path == "approx"
+    assert p.select.recall_target == 0.85
+    # recall_target on an exact select is recorded as ignored, not applied
+    p2 = plan.plan_local(stats, 8, select="fused", force="recall_target=0.5")
+    assert p2.select.recall_target == 1.0 and "ignored" in p2.reason
+    with pytest.raises(ValueError):
+        plan.plan_local(stats, 8, force="recall_target=1.5")
+    # sharded: approx rides hist_merge (pool histograms still psum)
+    sst = dataclasses_replace(stats, n_shards=8)
+    ps = plan.plan_sharded(sst, 8, axes=("data",), select="approx",
+                           recall_target=0.95)
+    assert ps.merge.strategy == "hist_merge"
+    # forcing a materializing select off an approx plan demotes the merge
+    pd = plan.plan_sharded(sst, 8, axes=("data",), select="approx",
+                           force="select=counting")
+    assert pd.merge.strategy == "concat_sort"
+    # block_mask plans accept a forced approx select (the mask feeds the
+    # partial reduce), unlike other non-fused selects
+    lay_stats = dataclasses_replace(stats, has_layout=True,
+                                    mean_bucket_rows=128, n_buckets=64,
+                                    index="kmeans")
+    pm = plan.plan_index(lay_stats, 8, kind="kmeans", nprobe=2,
+                         force="select=approx,recall_target=0.9")
+    assert pm.select.path == "approx"
+    assert pm.candidates.kind == "block_mask"
+    assert pm.select.recall_target == 0.9
+
+
+def dataclasses_replace(stats, **kw):
+    import dataclasses
+    return dataclasses.replace(stats, **kw)
+
+
+def test_plan_index_approx_masked_execution():
+    n, q, d, k = 512, 4, 64, 8
+    xp, qp, _, _ = _codes(7, n, q, d)
+    lay = layout_mod.build_layout(xp, d, n_buckets=8)
+    stats = plan.stats_of(xp, qp, d, layout=lay)
+    p = plan.plan_index(stats, k, kind="kmeans", nprobe=8, select="approx")
+    pf = plan.plan_index(stats, k, kind="kmeans", nprobe=8)
+    probe = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (q, 8))
+    dd, ii = plan.execute(p, qp, layout=lay, probe=probe)
+    # probing EVERY bucket at rt=1.0 == the exact masked fused plan
+    # (ties break by layout position on both, per the masked contract)
+    rd, ri = plan.execute(pf, qp, layout=lay, probe=probe)
+    assert (np.asarray(dd) == np.asarray(rd)).all()
+    assert (np.asarray(ii) == np.asarray(ri)).all()
+    # and distance-identical to the exact full scan
+    ed, _ = ops.hamming_topk(qp, xp, k, d + 1)
+    assert (np.asarray(dd) == np.asarray(ed)).all()
+
+
+def test_sharded_approx(multidevice):
+    """approx_topk_sharded under shard_map: rt=1.0 bit-identical to the
+    exact hist_merge (even and uneven shards); rt<1 meets the distance
+    recall target; the planner path (engine-level execute) agrees."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import binary, plan
+from repro.kernels import approx_select as ax, ops
+
+rng = np.random.default_rng(0)
+d, Q, N, k = 64, 6, 1024, 9
+xb = jnp.asarray(rng.integers(0, 2, (N, d)), jnp.uint8)
+qb = jnp.asarray(rng.integers(0, 2, (Q, d)), jnp.uint8)
+xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+xs = xp.reshape(4, N // 4, -1)
+
+def run(fn, *extra):
+    sp = (P(), P("data")) + (P("data"),) * len(extra)
+    f = shard_map(fn, mesh=mesh, in_specs=sp, out_specs=(P(), P()))
+    return f(qp, xs, *extra)
+
+ref = run(lambda q, x: ops.hamming_topk_sharded(q, x[0], k, d + 1,
+                                                ("data",), n_shards=4))
+got = run(lambda q, x: ax.approx_topk_sharded(q, x[0], k, d + 1, ("data",),
+                                              n_shards=4, recall_target=1.0,
+                                              bn=64))
+assert (np.asarray(ref[0]) == np.asarray(got[0])).all()
+assert (np.asarray(ref[1]) == np.asarray(got[1])).all()
+
+nv = jnp.asarray([256, 200, 256, 100], jnp.int32).reshape(4, 1)
+refu = run(lambda q, x, v: ops.hamming_topk_sharded(
+    q, x[0], k, d + 1, ("data",), n_shards=4, n_valid=v[0]), nv)
+gotu = run(lambda q, x, v: ax.approx_topk_sharded(
+    q, x[0], k, d + 1, ("data",), n_shards=4, recall_target=1.0,
+    n_valid=v[0], bn=64), nv)
+assert (np.asarray(refu[0]) == np.asarray(gotu[0])).all()
+assert (np.asarray(refu[1]) == np.asarray(gotu[1])).all()
+
+lo = run(lambda q, x: ax.approx_topk_sharded(q, x[0], k, d + 1, ("data",),
+                                             n_shards=4, recall_target=0.9,
+                                             bn=64))
+kth = np.asarray(ref[0])[:, k - 1:k]
+rec = float((np.asarray(lo[0]) <= kth).mean())
+assert rec >= 0.9, rec
+
+# the planner-built sharded approx plan executes through the same kernel
+stats = plan.StoreStats(n=N, d=d, w=xp.shape[1], q=Q, n_shards=4)
+pa = plan.plan_sharded(stats, k, axes=("data",), select="approx")
+assert pa.merge.strategy == "hist_merge"
+pd, pi = plan.execute(pa, qp, codes=xp, mesh=mesh)
+assert (np.asarray(pd) == np.asarray(ref[0])).all()
+assert (np.asarray(pi) == np.asarray(ref[1])).all()
+print("OK")
+""", n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# the measured autotune cache
+# ---------------------------------------------------------------------------
+
+def test_seeded_defaults_without_cache_are_deterministic():
+    a = tuning.topk_blocks(64, 1 << 16, 4, 129, backend="cpu")
+    b = tuning.topk_blocks(64, 1 << 16, 4, 129, backend="cpu")
+    assert a == b == tuning._topk_blocks_default(64, 1 << 16, 4, 129, "cpu")
+    assert tuning.approx_blocks(64, 1 << 16, 4, backend="cpu") \
+        == tuning.approx_blocks(64, 1 << 16, 4, backend="cpu")
+    assert tuning.hint_source("cpu", "topk", 64, 1 << 16, 4, 129) == "default"
+
+
+def test_measured_entry_overrides_default_and_reports_source():
+    cache = tuning.autotune_cache()
+    cache.put("cpu", "topk", 64, 1 << 16, 4, 129,
+              {"bq": 16, "bn": 1024, "sub": 64, "us": 12.0})
+    assert tuning.topk_blocks(64, 1 << 16, 4, 129, backend="cpu") \
+        == (16, 1024, 64)
+    assert tuning.hint_source("cpu", "topk", 64, 1 << 16, 4, 129) \
+        == "measured"
+    # geometry bucketing: any shape in the same pow2 bucket hits the entry
+    assert tuning.topk_blocks(40, (1 << 16) - 5, 4, 129, backend="cpu") \
+        == (16, 1024, 64)
+    # the exact-tier cost hints carry the source (the cost-hint seam)
+    h = tuning.cost_hints(64, 1 << 16, 4, 129, path="fused", backend="cpu")
+    assert h["hint_source"] == "measured"
+    # approx kind is keyed independently
+    assert tuning.hint_source("cpu", "approx", 64, 1 << 16, 4, 1) \
+        == "default"
+    cache.put("cpu", "approx", 64, 1 << 16, 4, 1, {"bn": 999, "us": 5.0})
+    assert tuning.approx_blocks(64, 1 << 16, 4, backend="cpu") == 1024
+    assert tuning.hint_source("cpu", "approx", 64, 1 << 16, 4, 1) \
+        == "measured"
+
+
+def test_insane_cached_entries_fall_back_to_defaults():
+    cache = tuning.autotune_cache()
+    default = tuning.topk_blocks(8, 4096, 2, 65, backend="cpu")
+    for bad in ({"bq": 0, "bn": 64, "sub": 8}, {"bq": "x"}, {}):
+        cache.clear()
+        cache.put("cpu", "topk", 8, 4096, 2, 65, bad)
+        assert tuning.topk_blocks(8, 4096, 2, 65, backend="cpu") == default
+        assert tuning.hint_source("cpu", "topk", 8, 4096, 2, 65) == "default"
+    # off-grid but positive shapes are sanitized, not rejected
+    cache.clear()
+    cache.put("cpu", "topk", 8, 4096, 2, 65, {"bq": 9, "bn": 100, "sub": 9})
+    bq, bn, sub = tuning.topk_blocks(8, 4096, 2, 65, backend="cpu")
+    assert bq % 8 == 0 and sub % 8 == 0 and bn % sub == 0
+
+
+def test_measure_with_fake_timer_and_disk_roundtrip(tmp_path):
+    path = os.fspath(tmp_path / "autotune.json")
+    tuning.configure(path)
+    calls = []
+    # fake clock: candidate bn=512 is "fast", everything else "slow" —
+    # fully deterministic, no wall-time in any assertion
+    t = [0.0]
+
+    def fake_timer():
+        return t[0]
+
+    def runner(cand):
+        calls.append(dict(cand))
+        t[0] += 1e-6 if cand["bn"] == 512 else 1e-3
+
+    cands = [{"bq": 16, "bn": 256, "sub": 64},
+             {"bq": 16, "bn": 512, "sub": 64},
+             {"bq": 16, "bn": 1024, "sub": 64}]
+    ent = tuning.measure(runner, cands, backend="cpu", kind="topk",
+                         Q=64, N=1 << 15, W=4, lanes=129, timer=fake_timer)
+    assert ent["bn"] == 512 and len(calls) == 4 * len(cands)
+    assert tuning.topk_blocks(64, 1 << 15, 4, 129, backend="cpu") \
+        == (16, 512, 64)
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert list(on_disk.values())[0]["bn"] == 512
+    # a fresh cache object reloads the measurement from disk
+    tuning.configure(path)
+    assert tuning.topk_blocks(64, 1 << 15, 4, 129, backend="cpu") \
+        == (16, 512, 64)
+    assert tuning.hint_source("cpu", "topk", 64, 1 << 15, 4, 129) \
+        == "measured"
+    # corrupt file degrades to seeded defaults, never raises
+    with open(path, "w") as f:
+        f.write("{ not json")
+    tuning.configure(path)
+    assert tuning.topk_blocks(64, 1 << 15, 4, 129, backend="cpu") \
+        == tuning._topk_blocks_default(64, 1 << 15, 4, 129, "cpu")
+
+
+def test_measure_feeds_explain_hint_source():
+    """explain() flips measured/default through the cost-hint seam for
+    BOTH tiers."""
+    stats = plan.StoreStats(n=1 << 15, d=128, w=4, q=64, backend="cpu")
+    pf = plan.plan_local(stats, 16, select="fused")
+    pa = plan.plan_local(stats, 16, select="approx", recall_target=0.9)
+    assert pf.explain()["geometry"]["hint_source"] == "default"
+    assert pa.explain()["geometry"]["hint_source"] == "default"
+    cache = tuning.autotune_cache()
+    cache.put("cpu", "topk", 64, 1 << 15, 4,
+              max(129, 16), {"bq": 16, "bn": 512, "sub": 64, "us": 1.0})
+    cache.put("cpu", "approx", 64, 1 << 15, 4, 1, {"bn": 2048, "us": 1.0})
+    assert pf.explain()["geometry"]["hint_source"] == "measured"
+    ga = pa.explain()["geometry"]
+    assert ga["hint_source"] == "measured" and ga["bn"] == 2048
+
+
+def test_topk_candidates_are_sane_and_include_default():
+    cands = tuning.topk_candidates(64, 1 << 15, 4, 129, backend="cpu")
+    default = tuning._topk_blocks_default(64, 1 << 15, 4, 129, "cpu")
+    assert dict(zip(("bq", "bn", "sub"), default)) in cands
+    for c in cands:
+        assert c["bq"] % 8 == 0 and c["sub"] % 8 == 0
+        assert c["bn"] % c["sub"] == 0

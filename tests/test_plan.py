@@ -535,3 +535,52 @@ def test_legacy_knobs_deprecation_nudge():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         engine.search_chunked(xp, qp, 4, 32, select="bisect")
+
+
+# ---------------------------------------------------------------------------
+# the approx tier's planner rows (kernel behavior lives in test_approx.py)
+# ---------------------------------------------------------------------------
+
+def test_matrix_approx_resolution_and_force():
+    """select="approx" is planner-resolvable and force-selectable but NEVER
+    an auto target; its recall knob rides the force grammar."""
+    stats = plan.StoreStats(n=4096, d=64, w=2, q=8)
+    path, reason = plan.resolve_select("approx", stats)
+    assert path == "approx" and "forced" in reason
+    # auto stays exact with and without a layout
+    assert plan.resolve_select("auto", stats)[0] == "composite"
+    lay_stats = dataclasses.replace(stats, has_layout=True,
+                                    mean_bucket_rows=64, n_buckets=64)
+    assert plan.resolve_select("auto", lay_stats)[0] == "fused"
+    # force grammar: select + recall_target together
+    p = plan.plan_local(stats, 5, force="select=approx,recall_target=0.9")
+    assert (p.select.path, p.select.recall_target) == ("approx", 0.9)
+    assert p.compact() == "probe:none|cand:full|select:approx@r0.9|merge:none"
+    for ch in ";,=":                    # bench-row grammar safety
+        assert ch not in p.compact()
+
+
+def test_matrix_approx_engine_exact_at_full_recall():
+    """Engine-level select="approx" (default recall_target=1.0) joins the
+    bit-identity matrix: dists AND ids equal the oracle, layout on or off."""
+    n, q, d, k = 1200, 5, 64, 7
+    xb, qb = _data(7, n, q, d)
+    xp, qp = binary.pack_bits(xb), binary.pack_bits(qb)
+    rd, ri = _oracle(xb, qb, k, d)
+    eng = engine.KNNEngine(codes=xp, d=d)
+    dd, ii = _quiet(eng.search, qp, k, select="approx")
+    assert (dd == rd).all() and (ii == ri).all()
+    # prebuilt layout streams through the approx scan like fused
+    engl = eng.with_layout(n_buckets=4)
+    pl = engl.query_plan(qp, k, select="approx")
+    assert pl.candidates.layout == "prebuilt"
+    ld, li = _quiet(engl.search, qp, k, select="approx")
+    fd, fi = _quiet(engl.search, qp, k, select="fused")
+    assert (ld == fd).all() and (li == fi).all()
+
+
+def test_decision_table_has_approx_rows():
+    table = plan.decision_table()
+    for needle in ("approx", "rt=0.9", "rt=1", "hist_merge",
+                   "retrieval_off"):
+        assert needle in table, needle
