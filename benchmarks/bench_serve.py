@@ -1,7 +1,9 @@
 """Open-loop serving soak bench: Poisson arrivals at configurable rates
 against the hardened server, measuring the SLO surface (p50/p99 token
-latency, shed/timeout/degraded fractions) under/at/over capacity, with
-optional fault injection.
+latency, shed/timeout/degraded fractions) AND the sustained throughput
+curve (qps / tokens-per-second over wall clock) under/at/over capacity,
+across varying datastore sizes and an optional multi-tenant mutation mix,
+with optional fault injection.
 
 Standalone CLI (what CI's serve-soak-smoke job runs):
     PYTHONPATH=src python benchmarks/bench_serve.py \
@@ -16,16 +18,20 @@ import dataclasses
 import json
 import sys
 import tempfile
+import time
 
 import numpy as np
 
+ID_STRIDE = 10_000_000          # disjoint per-tenant external id ranges
 
-def _tiny_cfg():
+
+def _tiny_cfg(datastore_size: int = 512):
     from repro.configs import get_config, scaled_down
     cfg = scaled_down(get_config("gemma-2b"), d_model=64, d_ff=128,
                       vocab_size=256)
     return dataclasses.replace(cfg, retrieval=dataclasses.replace(
-        cfg.retrieval, datastore_size=512, code_bits=64, k=8, chunk_size=512))
+        cfg.retrieval, datastore_size=datastore_size, code_bits=64, k=8,
+        chunk_size=512))
 
 
 def _build(cfg):
@@ -39,28 +45,54 @@ def _build(cfg):
     return mesh, params, store
 
 
+def _mk_tenant_arena(d: int, n_tenants: int, seed: int):
+    """A small in-memory multi-tenant arena with skewed sizes (one big
+    tenant, a tail of small ones) for the mixed-mutation soak rows."""
+    from repro.core import tenant as tenant_mod
+    rng = np.random.default_rng(seed)
+    ar = tenant_mod.TenantArena(d, bn=64, slack_frac=0.2, min_slack=4,
+                                max_pending=256)
+    sizes = [max(8, 128 >> (2 * i)) for i in range(n_tenants)]
+    for i in range(n_tenants):
+        codes = rng.integers(0, 2 ** 32, (sizes[i], d // 32),
+                             dtype=np.uint32)
+        ids = ID_STRIDE * i + np.arange(sizes[i], dtype=np.int64)
+        ar.create_tenant(f"t{i}", codes, ids=ids,
+                         values=np.arange(sizes[i], dtype=np.int32))
+    return ar
+
+
 def run_rate(cfg, mesh, params, store, *, rate: float, ticks: int,
              seed: int = 0, inject: bool = False, deadline: int = 50,
              max_queue: int = 8, max_batch: int = 4, max_len: int = 24,
-             max_new_tokens: int = 8, snapshot_dir=None) -> dict:
+             max_new_tokens: int = 8, snapshot_dir=None,
+             tenant_mix=None) -> dict:
     """Drive one open-loop run: Poisson(rate) arrivals per tick for 70% of
-    ``ticks``, then drain (deadlines bound the drain)."""
+    ``ticks``, then drain (deadlines bound the drain). ``tenant_mix``
+    ({tenant -> submission probability per tick}) attaches a multi-tenant
+    arena and drives a skewed append mix alongside the query load."""
     from repro.runtime import faults as faults_mod, server as server_mod
     inj = None
     if inject:
         inj = faults_mod.FaultInjector(
             seed=seed + 1, p={"store_search": 0.05, "ckpt_save": 0.05,
                               "ckpt_restore": 0.05})
+    arena = None
+    if tenant_mix:
+        arena = _mk_tenant_arena(cfg.retrieval.code_bits,
+                                 len(tenant_mix), seed)
     srv = server_mod.Server(
         cfg, mesh, params, max_batch=max_batch, max_len=max_len, store=store,
         max_queue=max_queue, default_deadline_ticks=deadline,
         degradation=server_mod.DegradationPolicy(queue_high=3, queue_low=1,
                                                  cooldown_ticks=4),
         fault_injector=inj, snapshot_dir=snapshot_dir if inject else None,
-        snapshot_every=10 if inject else None)
+        snapshot_every=10 if inject else None, tenants=arena)
     rng = np.random.default_rng(seed)
     uid = 0
+    mut_uid = 0
     arrive_until = int(ticks * 0.7)
+    t_wall = time.perf_counter()
     for t in range(ticks):
         if t < arrive_until:
             for _ in range(rng.poisson(rate)):
@@ -71,34 +103,67 @@ def run_rate(cfg, mesh, params, store, *, rate: float, ticks: int,
                         np.int32),
                     max_new_tokens=max_new_tokens))
                 uid += 1
+            if tenant_mix:
+                for i, (tid, p) in enumerate(sorted(tenant_mix.items())):
+                    if rng.random() < p:
+                        w = cfg.retrieval.code_bits // 32
+                        codes = rng.integers(0, 2 ** 32, (1, w),
+                                             dtype=np.uint32)
+                        srv.submit_append(
+                            codes, values=np.array([mut_uid % 256],
+                                                   np.int32),
+                            tenant=tid)
+                        mut_uid += 1
         srv.tick()
     guard = ticks + deadline + 100
     while srv.has_work and srv.ticks < guard:
         srv.tick()
+    wall = time.perf_counter() - t_wall
     s = srv.stats()
     s["rate"] = rate
     s["inject_faults"] = inject
+    s["store_n"] = int(store.codes.shape[0])
+    s["tenant_mix"] = dict(tenant_mix) if tenant_mix else None
+    # the sustained-throughput surface: requests and tokens per wall
+    # second over the WHOLE run, drain included — the QPS curve a capacity
+    # plan reads, not just the survival booleans
+    s["wall_s"] = wall
+    s["qps_sustained"] = s["done"] / max(wall, 1e-9)
+    s["tokens_per_s"] = len(srv.token_lat_s) / max(wall, 1e-9)
     return s
 
 
 def sweep(rates=(0.2, 0.6, 2.0), ticks: int = 300, inject: bool = False,
-          seed: int = 0) -> list:
-    """Three arrival-rate rows: under / at / over the slot-pool capacity
-    (~0.5 req/tick at max_batch=4, 8 new tokens + prompt replay)."""
-    cfg = _tiny_cfg()
-    mesh, params, store = _build(cfg)
+          seed: int = 0, store_sizes=(512,), tenant_mix: bool = False
+          ) -> list:
+    """Arrival-rate rows (under / at / over the slot-pool capacity,
+    ~0.5 req/tick at max_batch=4) crossed with datastore sizes, plus —
+    with ``tenant_mix`` — a skewed multi-tenant mutation mix at the
+    middle rate: the sustained QPS curve over store scale and tenancy."""
     rows = []
-    with tempfile.TemporaryDirectory() as tmp:
-        for rate in rates:
-            rows.append(run_rate(cfg, mesh, params, store, rate=rate,
-                                 ticks=ticks, seed=seed, inject=inject,
-                                 snapshot_dir=tmp))
+    for size in store_sizes:
+        cfg = _tiny_cfg(datastore_size=size)
+        mesh, params, store = _build(cfg)
+        with tempfile.TemporaryDirectory() as tmp:
+            for rate in rates:
+                rows.append(run_rate(cfg, mesh, params, store, rate=rate,
+                                     ticks=ticks, seed=seed, inject=inject,
+                                     snapshot_dir=tmp))
+            if tenant_mix:
+                mix = {"t0": 0.5, "t1": 0.2, "t2": 0.1}
+                rows.append(run_rate(
+                    cfg, mesh, params, store, rate=rates[len(rates) // 2],
+                    ticks=ticks, seed=seed, inject=inject,
+                    snapshot_dir=tmp, tenant_mix=mix))
     return rows
 
 
 def _row_line(s: dict) -> str:
-    derived = (f"rate={s['rate']};submitted={s['submitted']};"
+    derived = (f"rate={s['rate']};store_n={s['store_n']};"
+               f"submitted={s['submitted']};"
                f"done={s['done']};lost={s['lost']};"
+               f"qps={s['qps_sustained']:.2f};"
+               f"tokens_per_s={s['tokens_per_s']:.1f};"
                f"p50_token_ms={s['p50_token_s'] * 1e3:.2f};"
                f"p99_token_ms={s['p99_token_s'] * 1e3:.2f};"
                f"shed_frac={s['shed_frac']:.3f};"
@@ -106,13 +171,19 @@ def _row_line(s: dict) -> str:
                f"degraded_frac={s['degraded_frac']:.3f};"
                f"transitions={s['transitions']};"
                f"search_retries={s['search_retries']}")
-    name = f"serve_r{s['rate']:g}" + ("_faults" if s["inject_faults"] else "")
+    if s.get("tenant_mix"):
+        derived += f";tenants={len(s['tenant_mix'])}"
+    name = f"serve_r{s['rate']:g}_n{s['store_n']}"
+    if s.get("tenant_mix"):
+        name += "_mix"
+    if s["inject_faults"]:
+        name += "_faults"
     return f"{name},{s['mean_tick_s'] * 1e6:.1f},{derived}"
 
 
 def run(report):
     """benchmarks/run.py hook — short clean sweep (no fault injection,
-    timing-pure)."""
+    timing-pure), one store size."""
     for s in sweep(rates=(0.2, 0.6, 2.0), ticks=120, inject=False):
         report(_row_line(s))
 
@@ -122,6 +193,11 @@ def main():
     ap.add_argument("--ticks", type=int, default=300)
     ap.add_argument("--rates", default="0.2,0.6,2.0",
                     help="comma-separated arrivals/tick (under/at/over)")
+    ap.add_argument("--store-sizes", default="512,2048",
+                    help="comma-separated datastore sizes to sweep")
+    ap.add_argument("--tenant-mix", action="store_true",
+                    help="add a skewed multi-tenant mutation-mix row per "
+                         "store size")
     ap.add_argument("--inject-faults", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -129,8 +205,10 @@ def main():
     args = ap.parse_args()
 
     rates = tuple(float(r) for r in args.rates.split(","))
+    sizes = tuple(int(n) for n in args.store_sizes.split(","))
     rows = sweep(rates=rates, ticks=args.ticks, inject=args.inject_faults,
-                 seed=args.seed)
+                 seed=args.seed, store_sizes=sizes,
+                 tenant_mix=args.tenant_mix)
     print("name,us_per_call,derived")
     for s in rows:
         print(_row_line(s), flush=True)
@@ -138,6 +216,8 @@ def main():
         with open(args.json, "w") as f:
             json.dump({"bench": "serve", "config": "gemma-2b(tiny)",
                        "ticks": args.ticks,
+                       "store_sizes": list(sizes),
+                       "tenant_mix": args.tenant_mix,
                        "inject_faults": args.inject_faults,
                        "rows": rows}, f, indent=1)
         print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)

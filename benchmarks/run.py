@@ -14,8 +14,9 @@ import traceback
 
 from benchmarks import (bench_approx, bench_compounding, bench_energy_proxy,
                         bench_indexing, bench_mutate, bench_packing,
-                        bench_serve, bench_statistical_reduction,
-                        bench_tenant, bench_throughput, bench_workloads)
+                        bench_serve, bench_shardfault,
+                        bench_statistical_reduction, bench_tenant,
+                        bench_throughput, bench_workloads)
 
 BENCHES = [
     ("fig4", bench_throughput),
@@ -29,6 +30,7 @@ BENCHES = [
     ("serve", bench_serve),
     ("mutate", bench_mutate),
     ("tenant", bench_tenant),
+    ("shardfault", bench_shardfault),
 ]
 
 

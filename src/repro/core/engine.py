@@ -144,7 +144,8 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
                    chunk: int = plan_mod.DEFAULT_CHUNK,
                    method: str = DistanceMethod.XOR,
                    select: str = "auto", reorder_local: bool = False,
-                   merge: Optional[str] = None, shard_n_valid=None):
+                   merge: Optional[str] = None, fanout: int = 0,
+                   shard_n_valid=None, shard_participate=None):
     """Datastore sharded over ``axes`` (cardinality sharding); queries
     replicated. A thin plan-builder: the planner decides the merge
     strategy, the executor runs it.
@@ -178,6 +179,14 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
     shards padded to a common slice size (fused select only). Results are
     bit-identical to a single-device search over the concatenation of the
     valid rows, including when k exceeds one shard's valid rows.
+
+    ``merge="hist_tree"`` (auto past 8 shards) runs the SAME counting
+    select with the histogram/output psums tree-scheduled at ``fanout``
+    (default from ``tuning.merge_fanout``) — bit-identical, hierarchical
+    traffic. ``shard_participate``: optional (n_shards,) 0/1 liveness
+    mask (hist-family merges only) — dead shards' rows are excluded
+    exactly and ids renumber over the survivors, the degraded-but-exact
+    answer of the shard-fault-tolerance layer.
     """
     if select != "auto":
         plan_mod._warn_legacy("search_sharded", "select", select)
@@ -189,9 +198,11 @@ def search_sharded(codes_packed: jax.Array, q_packed: jax.Array, k: int, d: int,
     p = plan_mod.plan_sharded(stats, k, axes=axes, k_local=k_local,
                               select=select, method=method, chunk=chunk,
                               reorder_local=reorder_local, merge=merge,
+                              fanout=fanout,
                               uneven=shard_n_valid is not None)
     return plan_mod.execute(p, q_packed, codes=codes_packed, mesh=mesh,
-                            shard_n_valid=shard_n_valid)
+                            shard_n_valid=shard_n_valid,
+                            shard_participate=shard_participate)
 
 
 def shard_datastore(codes_packed: jax.Array, mesh: Mesh, axes: Sequence[str]):

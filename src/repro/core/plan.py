@@ -128,17 +128,28 @@ class MergeStage:
     select — per-shard pass-1 histograms ``psum`` into ONE global race,
     each shard emits into disjoint slots of the global (Q, k) output
     (exact, O(Q·bins) cross-device traffic, fused select only);
-    "concat_sort" is the legacy hierarchical merge — every shard reports
-    its local top-k', the gathered (n_shards·k') candidates are sorted and
-    cut (O(n_shards·Q·k') traffic; k_local < k makes it the statistical
-    reduction of core/hierarchy.py).
+    "hist_tree" is the SAME distributed counting select with the psums
+    reduced hierarchically (``ops._tree_psum``): an intra-host group psum
+    then ``fanout``-wide inter-host tree rounds — bit-identical results
+    (integer addition is associative), tree-shaped traffic for many-host
+    meshes; "concat_sort" is the legacy hierarchical merge — every shard
+    reports its local top-k', the gathered (n_shards·k') candidates are
+    sorted and cut (O(n_shards·Q·k') traffic; k_local < k makes it the
+    statistical reduction of core/hierarchy.py).
     """
 
     kind: str = "none"          # none | sharded
     k_local: int = 0            # per-shard k' (k_local == k is exact)
     axes: Tuple[str, ...] = ()
     reorder_local: bool = False  # per-shard local_sort before the scan
-    strategy: str = ""          # sharded: hist_merge | concat_sort
+    strategy: str = ""          # sharded: hist_merge | hist_tree | concat_sort
+    fanout: int = 0             # hist_tree group width (0 = flat psum)
+
+
+# the histogram-racing merge family: flat and tree-reduced distributed
+# counting select — interchangeable everywhere the planner asks "is this
+# merge exact by construction" (they differ only in psum schedule)
+HIST_STRATEGIES = ("hist_merge", "hist_tree")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,7 +226,9 @@ class QueryPlan:
         m = self.merge.kind
         if self.merge.kind == "sharded":
             m = self.merge.strategy or "sharded"
-            if m != "hist_merge":
+            if m == "hist_tree":
+                m += f"@f{self.merge.fanout}"
+            elif m != "hist_merge":
                 m += f"@k{self.merge.k_local}"
         return f"probe:{p}|cand:{c}|select:{s}|merge:{m}"
 
@@ -229,10 +242,15 @@ class QueryPlan:
                   "approx_select partial-reduce top-L + lexicographic "
                   "sort merge")
             if self.merge.kind == "sharded":
-                ks += (("approx_select.approx_topk_sharded (pool-hist psum "
-                        "+ disjoint-slot output psum)",)
-                       if self.merge.strategy == "hist_merge"
-                       else ("all_gather k'-per-shard + sort_key_val cut",))
+                if self.merge.strategy == "hist_tree":
+                    ks += (("approx_select.approx_topk_sharded (pool-hist "
+                            "tree psum + disjoint-slot output tree psum, "
+                            f"fanout={self.merge.fanout})"),)
+                elif self.merge.strategy == "hist_merge":
+                    ks += ("approx_select.approx_topk_sharded (pool-hist "
+                           "psum + disjoint-slot output psum)",)
+                else:
+                    ks += ("all_gather k'-per-shard + sort_key_val cut",)
             return ks
         if path in ("fused", "fused_scan"):
             ks = ("kernels.topk_select.hamming_hist_pallas",
@@ -248,10 +266,15 @@ class QueryPlan:
                    "bisect": "topk.counting_topk_bisect"}[path]
             ks = (dist, sel, "lax.scan + topk.merge_topk")
         if self.merge.kind == "sharded":
-            ks += (("ops.hamming_topk_sharded (hist psum + disjoint-slot "
-                    "output psum)",)
-                   if self.merge.strategy == "hist_merge"
-                   else ("all_gather k'-per-shard + sort_key_val cut",))
+            if self.merge.strategy == "hist_tree":
+                ks += (("ops.hamming_topk_sharded (hist tree psum + "
+                        "disjoint-slot output tree psum, "
+                        f"fanout={self.merge.fanout})"),)
+            elif self.merge.strategy == "hist_merge":
+                ks += ("ops.hamming_topk_sharded (hist psum + disjoint-slot "
+                       "output psum)",)
+            else:
+                ks += ("all_gather k'-per-shard + sort_key_val cut",)
         return ks
 
     def _predicted_pruning(self) -> str:
@@ -287,7 +310,8 @@ class QueryPlan:
             g["merge"] = tuning.shard_hints(
                 self.q, self.k, self.d + 1, max(self.n_shards, 1),
                 k_local=self.merge.k_local,
-                strategy=self.merge.strategy or "concat_sort")
+                strategy=self.merge.strategy or "concat_sort",
+                fanout=self.merge.fanout)
         return g
 
     def _geometry_base(self, backend: str) -> dict:
@@ -386,6 +410,12 @@ class QueryPlan:
                 f"shards, predicted traffic {merge['merge_bytes']} B "
                 f"(hist_merge {merge['hist_merge_bytes']} B vs concat_sort "
                 f"{merge['concat_sort_bytes']} B)")
+            if merge["strategy"] == "hist_tree":
+                lines.append(
+                    f"  merge levels: fanout={merge['fanout']} "
+                    f"levels={merge['tree_levels']} — intra "
+                    f"{merge['hist_tree_intra_bytes']} B, inter "
+                    f"{merge['hist_tree_inter_bytes']} B")
         lines += [
             f"  pruning: {e['predicted_pruning']}",
             f"  reason: {self.reason}",
@@ -420,7 +450,8 @@ def parse_force(spec: str) -> dict:
     pairs, e.g. ``"select=fused_scan,chunk=4096,layout=off"``. Keys:
     select, method, chunk, layout (off|prebuilt|local_sort), k_local,
     reorder_local (0/1), candidates (full|block_mask|gather),
-    merge (hist_merge|concat_sort — sharded plans only)."""
+    merge (hist_merge|hist_tree|concat_sort — sharded plans only),
+    fanout (hist_tree group width)."""
     out = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
         key, eq, val = part.partition("=")
@@ -493,11 +524,13 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
     if "k_local" in f:
         if merge.kind == "sharded":
             merge = dataclasses.replace(merge, k_local=int(f["k_local"]))
-            if merge.k_local < plan.k and merge.strategy == "hist_merge":
-                # hist_merge is exact by construction; k' < k asked for the
-                # statistical reduction, which only the concat merge runs
-                merge = dataclasses.replace(merge, strategy="concat_sort")
-                reason += ("; hist_merge demoted to concat_sort "
+            if merge.k_local < plan.k and merge.strategy in HIST_STRATEGIES:
+                # the hist family is exact by construction; k' < k asked for
+                # the statistical reduction, which only the concat merge runs
+                demoted = merge.strategy
+                merge = dataclasses.replace(merge, strategy="concat_sort",
+                                            fanout=0)
+                reason += (f"; {demoted} demoted to concat_sort "
                            "(k_local < k is the statistical reduction)")
         else:
             # inapplicable != unknown: record the drop instead of silently
@@ -513,31 +546,53 @@ def _apply_force(plan: QueryPlan, force) -> QueryPlan:
             reason += "; forced reorder_local ignored (local plan)"
     if "merge" in f:
         mv = f["merge"]
-        if mv not in ("hist_merge", "concat_sort"):
+        if mv not in HIST_STRATEGIES + ("concat_sort",):
             raise ValueError(f"force_plan merge={mv!r}")
         if merge.kind != "sharded":
             reason += "; forced merge ignored (local plan has no merge)"
-        elif mv == "hist_merge" and sel.path not in ("fused", "approx"):
-            reason += ("; forced merge=hist_merge ignored "
+        elif mv in HIST_STRATEGIES and sel.path not in ("fused", "approx"):
+            reason += (f"; forced merge={mv} ignored "
                        "(needs the fused or approx select)")
-        elif mv == "hist_merge" and merge.k_local < plan.k:
-            reason += ("; forced merge=hist_merge ignored "
+        elif mv in HIST_STRATEGIES and merge.k_local < plan.k:
+            reason += (f"; forced merge={mv} ignored "
                        "(k_local < k is the statistical concat merge)")
         elif mv != merge.strategy:
             merge = dataclasses.replace(merge, strategy=mv)
+            if mv != "hist_tree":
+                merge = dataclasses.replace(merge, fanout=0)
             reason += f"; forced merge={mv}"
+    if "fanout" in f:
+        fv = int(f["fanout"])
+        if merge.kind == "sharded" and merge.strategy == "hist_tree":
+            if fv < 2:
+                raise ValueError(f"force_plan fanout={fv} (hist_tree needs "
+                                 f"fanout >= 2)")
+            merge = dataclasses.replace(merge, fanout=fv)
+            reason += f"; forced fanout={fv}"
+        else:
+            reason += ("; forced fanout ignored (only hist_tree merges "
+                       "have one)")
     unknown = set(f) - {"select", "method", "chunk", "layout", "candidates",
-                        "k_local", "reorder_local", "merge", "recall_target"}
+                        "k_local", "reorder_local", "merge", "recall_target",
+                        "fanout"}
     if unknown:
         raise ValueError(f"unknown force_plan keys: {sorted(unknown)}")
     # re-enforce the planner's invariants the overrides may have broken:
-    # hist_merge races histograms — of per-shard rows (fused) or per-shard
-    # candidate pools (approx); any other forced select demotes the
-    # sharded merge back to the concat/sort fallback
-    if merge.strategy == "hist_merge" and sel.path not in ("fused", "approx"):
-        merge = dataclasses.replace(merge, strategy="concat_sort")
-        reason += ("; hist_merge demoted to concat_sort "
+    # the hist family races histograms — of per-shard rows (fused) or
+    # per-shard candidate pools (approx); any other forced select demotes
+    # the sharded merge back to the concat/sort fallback
+    if (merge.strategy in HIST_STRATEGIES
+            and sel.path not in ("fused", "approx")):
+        demoted = merge.strategy
+        merge = dataclasses.replace(merge, strategy="concat_sort", fanout=0)
+        reason += (f"; {demoted} demoted to concat_sort "
                    f"(select={sel.path} cannot race histograms)")
+    # a hist_tree merge always carries a concrete fanout (the executor and
+    # shard_hints both consume it); default from the tuning heuristic
+    if merge.strategy == "hist_tree" and merge.fanout < 2:
+        from repro.kernels import tuning as _tuning
+        merge = dataclasses.replace(
+            merge, fanout=_tuning.merge_fanout(max(plan.n_shards, 1)) or 2)
     # only the fused/approx selects consume a layout (materializing selects
     # must scan the original order, or tie ids drift from the legacy paths)
     if (cand.kind == "full" and sel.path not in ("fused", "approx")
@@ -646,7 +701,8 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
                  method: str = DistanceMethod.XOR, chunk: int = DEFAULT_CHUNK,
                  reorder_local: bool = False, layout_policy: str = "auto",
                  merge: Optional[str] = None, uneven: bool = False,
-                 recall_target: float = 1.0, force=None) -> QueryPlan:
+                 recall_target: float = 1.0, fanout: int = 0,
+                 force=None) -> QueryPlan:
     """Plan a mesh-sharded search.
 
     Merge strategy: the default for an exact sharded search (k_local == k)
@@ -658,7 +714,13 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
     the fused select, so sharded ``"auto"`` now resolves to "fused";
     ``merge="concat_sort"`` forces the legacy hierarchical merge, and
     k_local < k (the statistical reduction of core/hierarchy.py, inexact
-    by design) always takes it. A prebuilt GLOBAL layout cannot follow the
+    by design) always takes it. Past 8 shards auto upgrades the flat psum
+    to ``"hist_tree"`` — the SAME counting select with the histogram and
+    output reductions tree-scheduled (``ops._tree_psum``, fanout from
+    ``tuning.merge_fanout`` unless ``fanout`` pins it) — bit-identical
+    results, per-hop traffic bounded by the fanout instead of the shard
+    count; ``merge="hist_tree"`` forces it at any shard count. A prebuilt
+    GLOBAL layout cannot follow the
     shard slicing, so the only layout option is the per-shard
     ``local_sort`` — taken when the caller asks (``reorder_local``) or
     config demands a layout, and only for the fused path (no other select
@@ -691,22 +753,37 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
         reason += "; per-shard local_sort before the scan"
     if k_local < k:
         reason += f"; statistical reduction k'={k_local} (inexact, bounded)"
-    # hist_merge races histograms of rows (fused) or candidate pools
-    # (approx) — both produce the psum-able (Q, bins) counts
-    strategy = "hist_merge" if (path in ("fused", "approx")
-                                and k_local >= k) else "concat_sort"
+    # the hist family races histograms of rows (fused) or candidate pools
+    # (approx) — both produce the psum-able (Q, bins) counts; past 8
+    # shards the flat psum upgrades to the tree schedule (same sums)
+    n_sh = max(stats.n_shards, 1)
+    if path in ("fused", "approx") and k_local >= k:
+        strategy = "hist_tree" if n_sh > 8 else "hist_merge"
+    else:
+        strategy = "concat_sort"
+    auto_strategy = strategy
     if merge is not None:
-        if merge not in ("hist_merge", "concat_sort"):
+        if merge not in HIST_STRATEGIES + ("concat_sort",):
             raise ValueError(f"unknown merge strategy {merge!r}; "
-                             f"known: hist_merge|concat_sort")
-        if merge == "hist_merge" and strategy != "hist_merge":
-            reason += ("; merge=hist_merge ignored ("
+                             f"known: hist_merge|hist_tree|concat_sort")
+        if merge in HIST_STRATEGIES and strategy == "concat_sort":
+            reason += (f"; merge={merge} ignored ("
                        + ("k_local < k is the statistical concat merge"
                           if k_local < k else "needs the fused or approx "
                           "select") + ")")
         elif merge != strategy:
             strategy = merge
             reason += f"; forced merge={merge}"
+    if strategy == "hist_tree" and strategy == auto_strategy:
+        reason += (f"; hist_tree over {n_sh} shards (per-hop traffic "
+                   f"bounded by the fanout, not the shard count)")
+    eff_fanout = 0
+    if strategy == "hist_tree":
+        from repro.kernels import tuning as _tuning
+        eff_fanout = fanout if fanout >= 2 else (_tuning.merge_fanout(n_sh)
+                                                 or 2)
+    elif fanout:
+        reason += "; fanout ignored (only hist_tree merges have one)"
     plan = QueryPlan(
         probe=ProbeStage(),
         candidates=CandidateStage(kind="full",
@@ -714,7 +791,8 @@ def plan_sharded(stats: StoreStats, k: int, axes: Sequence[str],
         select=SelectStage(path=path, method=method, chunk=chunk,
                            recall_target=recall_target),
         merge=MergeStage(kind="sharded", k_local=k_local, axes=tuple(axes),
-                         reorder_local=rl, strategy=strategy),
+                         reorder_local=rl, strategy=strategy,
+                         fanout=eff_fanout),
         n=stats.n, d=stats.d, w=stats.w, q=stats.q, k=k,
         n_shards=max(stats.n_shards, 1), backend=stats.backend, reason=reason)
     return _apply_force(plan, force)
@@ -886,22 +964,30 @@ def gather_scan(codes: jax.Array, q_packed: jax.Array, cand: jax.Array,
 
 
 def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
-                     mesh: Mesh, shard_n_valid=None
+                     mesh: Mesh, shard_n_valid=None, shard_participate=None
                      ) -> Tuple[jax.Array, jax.Array]:
     """The sharded merge stage.
 
-    ``strategy == "hist_merge"``: the distributed counting select
+    ``strategy in HIST_STRATEGIES``: the distributed counting select
     (``ops.hamming_topk_sharded``) — per-shard pass-1 histograms psum into
     one global r*, each shard's pass 2 scatters into disjoint slots of the
-    global (Q, k) output. Exact; composes with the per-shard local_sort
-    layout.  Otherwise the legacy hierarchical merge (the former
-    ``engine.search_sharded`` body): per-shard local top-k', all-gather of
-    (k' dists, ids) per shard, one sorted cut.
+    global (Q, k) output ("hist_tree" reduces those psums through the
+    ``fanout``-wide tree schedule, bit-identically). Exact; composes with
+    the per-shard local_sort layout.  Otherwise the legacy hierarchical
+    merge (the former ``engine.search_sharded`` body): per-shard local
+    top-k', all-gather of (k' dists, ids) per shard, one sorted cut.
 
     ``shard_n_valid``: optional (n_shards,) per-shard valid-row counts for
     uneven shards padded to a common slice size (fused select only; ids
     are reported in the UNPADDED global space — bit-identical to a
-    single-device search over the concatenation of the valid rows)."""
+    single-device search over the concatenation of the valid rows).
+
+    ``shard_participate``: optional (n_shards,) 0/1 mask — shard fault
+    tolerance. A zero (dead) shard contributes no rows: its n_valid is
+    zeroed inside the kernels and ids renumber over the survivors, so the
+    result is bit-identical to a from-scratch search over a store holding
+    only the surviving shards' valid rows (hist-family strategies only;
+    composes with ``shard_n_valid``)."""
     axes = plan.merge.axes
     k, k_local = plan.k, plan.merge.k_local
     n_dev = 1
@@ -909,7 +995,9 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
         n_dev *= mesh.shape[a]
     N = codes.shape[0]
     n_loc = N // n_dev
-    hist_merge = plan.merge.strategy == "hist_merge"
+    hist_fam = plan.merge.strategy in HIST_STRATEGIES
+    tree_fanout = (plan.merge.fanout
+                   if plan.merge.strategy == "hist_tree" else 0)
     nv_all = None
     if shard_n_valid is not None:
         nv_all = jnp.asarray(shard_n_valid, jnp.int32)
@@ -923,6 +1011,18 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
                 f"select; this plan resolved select={plan.select.path!r} — "
                 f"leave select='auto' (plan_sharded resolves it to 'fused' "
                 f"when shard_n_valid is coming) or force select='fused'")
+    part_all = None
+    if shard_participate is not None:
+        part_all = jnp.asarray(shard_participate, jnp.int32)
+        assert part_all.shape == (n_dev,), (part_all.shape, n_dev)
+        if not hist_fam:
+            # the concat merge all-gathers fixed per-shard candidate lists;
+            # it has no slot renumbering to exclude a shard exactly
+            raise ValueError(
+                f"shard_participate (degraded search) needs a hist-family "
+                f"merge; this plan resolved "
+                f"merge={plan.merge.strategy!r} — leave merge unset or "
+                f"force merge='hist_merge'/'hist_tree'")
 
     def local(codes_loc, q):
         from repro.kernels import ops
@@ -933,26 +1033,35 @@ def _execute_sharded(plan: QueryPlan, q_packed: jax.Array, codes: jax.Array,
             flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
         nv = ib = nt = None
         if nv_all is not None:
-            csum = jnp.cumsum(nv_all)
             nv = nv_all[flat]
-            ib, nt = csum[flat] - nv, csum[-1]
+            if part_all is None:
+                csum = jnp.cumsum(nv_all)
+                ib, nt = csum[flat] - nv, csum[-1]
+            else:
+                # the kernels renumber over the masked counts; hand them
+                # the replicated masked scan instead of gathering it
+                nv_eff = nv_all * part_all
+                csum = jnp.cumsum(nv_eff)
+                ib, nt = csum[flat] - nv_eff[flat], csum[-1]
         perm_l = None
         codes_l = codes_loc
         if plan.candidates.layout == "local_sort":
             codes_l, perm_l = layout_mod.local_sort(codes_loc, plan.d,
                                                     n_valid=nv)
         approx = plan.select.path == "approx"
-        if hist_merge:
+        if hist_fam:
             if approx:
                 from repro.kernels import approx_select
 
                 return approx_select.approx_topk_sharded(
                     q, codes_l, k, plan.d + 1, axes, n_shards=n_dev,
                     recall_target=plan.select.recall_target,
-                    n_valid=nv, id_base=ib, n_total=nt, perm=perm_l)
+                    n_valid=nv, id_base=ib, n_total=nt, perm=perm_l,
+                    participate=part_all, tree_fanout=tree_fanout)
             return ops.hamming_topk_sharded(
                 q, codes_l, k, plan.d + 1, axes, n_shards=n_dev,
-                n_valid=nv, id_base=ib, n_total=nt, perm=perm_l)
+                n_valid=nv, id_base=ib, n_total=nt, perm=perm_l,
+                participate=part_all, tree_fanout=tree_fanout)
         if nv is not None:
             # uneven shards on the legacy merge: mask padding in-kernel,
             # report ids in the unpadded global space, sentinels at the
@@ -1016,12 +1125,15 @@ def execute(plan: QueryPlan, q_packed: jax.Array, *,
             mesh: Optional[Mesh] = None,
             id_offset: jax.Array | int = 0,
             shard_n_valid=None,
+            shard_participate=None,
             return_stats: bool = False):
     """Run a plan over concrete operands.
 
     Operand contract per stage: sharded merge needs ``codes`` + ``mesh``
     (+ optional ``shard_n_valid`` (n_shards,) valid-row counts for uneven
-    shards padded to a common slice); block_mask candidates need
+    shards padded to a common slice, and/or ``shard_participate``
+    (n_shards,) 0/1 liveness — dead shards' rows are excluded exactly,
+    hist-family merges only); block_mask candidates need
     ``layout`` (+ ``probe`` bucket ids and/or ``cand_ids`` original ids,
     core/layout.py semantics); gather candidates need ``codes`` + ``cand``
     ((Q, C) int32, -1 padded); full scans need ``codes`` (plus ``layout``
@@ -1030,7 +1142,8 @@ def execute(plan: QueryPlan, q_packed: jax.Array, *,
     if plan.merge.kind == "sharded":
         assert mesh is not None and codes is not None
         return _execute_sharded(plan, q_packed, codes, mesh,
-                                shard_n_valid=shard_n_valid)
+                                shard_n_valid=shard_n_valid,
+                                shard_participate=shard_participate)
     if plan.candidates.kind == "block_mask":
         assert layout is not None
         if plan.select.path == "approx":
@@ -1129,6 +1242,27 @@ def _scenario_rows(flat, lay, k):
         ("sharded / forced concat_sort merge (legacy fallback)",
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",), merge="concat_sort")),
+        ("sharded / 64 shards: auto upgrades to the hierarchical tree "
+         "merge",
+         plan_sharded(dataclasses.replace(flat, n_shards=64), k,
+                      axes=("data",))),
+        ("sharded / forced hist_tree fanout=4 at 8 shards",
+         plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                      axes=("data",), merge="hist_tree", fanout=4)),
+        ("shard loss: degraded-but-exact answer over the survivors",
+         dataclasses.replace(
+             plan_sharded(dataclasses.replace(flat, n_shards=8), k,
+                          axes=("data",)),
+             reason="shard fault tolerance: a dead shard is excluded via "
+                    "the participation mask (shard_participate) — its "
+                    "n_valid is zeroed inside the kernels and id bases "
+                    "renumber over the masked scan, so the answer is "
+                    "bit-identical to a from-scratch search over only the "
+                    "surviving rows; every response carries a "
+                    "CoverageReport (per-query coverage_frac + dead-shard "
+                    "list, dist/health.py), and row-range replicas "
+                    "(dist/sharding.ReplicaMap) restore full coverage "
+                    "when a primary dies")),
         ("sharded / exact + reorder_local (hist_merge over sorted shards)",
          plan_sharded(dataclasses.replace(flat, n_shards=8), k,
                       axes=("data",), reorder_local=True)),
@@ -1199,7 +1333,10 @@ def decision_table() -> str:
     def merge_cell(p):
         if p.merge.kind == "none":
             return "none"
-        if p.merge.strategy == "hist_merge":
+        if p.merge.strategy == "hist_tree":
+            m = (f"hist_tree fanout={p.merge.fanout} (exact, tree psum "
+                 f"of histograms)")
+        elif p.merge.strategy == "hist_merge":
             m = "hist_merge (exact, psum of histograms)"
         else:
             m = f"concat_sort k'={p.merge.k_local}"

@@ -112,6 +112,35 @@ def make_prefill_step(cfg: ModelConfig, mesh, seq_len: int, *,
 
 
 # ---------------------------------------------------------------------------
+# per-unit search steps (host-orchestrated fault-tolerant search)
+# ---------------------------------------------------------------------------
+
+# (bins, k) -> (hist_fn, topk_fn). dist/search.py calls one jitted hist and
+# one jitted top-k per SURVIVING unit per query; units die and fail over
+# mid-stream, so the callables must be shared across units and never
+# rebuilt on the failover path (jit itself re-specializes per range shape,
+# and equal-shape ranges share one executable).
+_UNIT_STEP_CACHE: dict = {}
+
+
+def unit_search_steps(bins: int, k: int):
+    """Memoized jitted per-unit callables for dist/search.py:
+    ``hist(q, x) -> (Q, bins)`` partial histogram and ``topk(q, x) ->
+    (dists, ids)`` local top-k over ONE unit's row range."""
+    key = (int(bins), int(k))
+    hit = _UNIT_STEP_CACHE.get(key)
+    if hit is not None:
+        return hit
+    from repro.kernels import ops
+
+    hist = jax.jit(lambda q, x: ops.hamming_hist(q, x, key[0]))
+    topk = jax.jit(lambda q, x: ops.hamming_topk(q, x, key[1], key[0]))
+    out = (hist, topk)
+    _UNIT_STEP_CACHE[key] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
 # serve
 # ---------------------------------------------------------------------------
 

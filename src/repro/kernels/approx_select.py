@@ -269,6 +269,8 @@ def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
                         id_base: jax.Array | None = None,
                         n_total: jax.Array | int | None = None,
                         perm: jax.Array | None = None,
+                        participate: jax.Array | None = None,
+                        tree_fanout: int = 0,
                         bn: Optional[int] = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Distributed approximate select — hist_merge over per-shard candidate
@@ -293,7 +295,11 @@ def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
     ``ops.hamming_topk_sharded``. ``perm``: this shard's local layout
     permutation (winners report original local ids; in-shard tie order
     then follows (dist, original id), the usual layout report-order
-    freedom)."""
+    freedom). ``participate``/``tree_fanout``: the fault-tolerance and
+    hierarchical-merge contracts of ``ops.hamming_topk_sharded`` — a
+    dead shard's pool is emptied and ids renumber over the survivors;
+    fanout >= 2 reduces the pool histograms and outputs through
+    ``ops._tree_psum`` (bit-identical sums)."""
     from repro.kernels import ops
 
     axes = tuple(axis_names)
@@ -307,12 +313,25 @@ def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
     flat = jnp.zeros((), jnp.int32)
     for a in axes:
         flat = flat * jax.lax.psum(jnp.int32(1), a) + jax.lax.axis_index(a)
+    part = None
+    if participate is not None:
+        part = jnp.asarray(participate, jnp.int32).reshape(n_shards)
     if n_valid is None:
-        nv = jnp.int32(n_loc)
-        ib = (flat * n_loc).astype(jnp.int32) if id_base is None else id_base
-        nt = n_shards * n_loc if n_total is None else n_total
+        if part is None:
+            nv = jnp.int32(n_loc)
+            ib = ((flat * n_loc).astype(jnp.int32)
+                  if id_base is None else id_base)
+            nt = n_shards * n_loc if n_total is None else n_total
+        else:
+            nv_all = part * jnp.int32(n_loc)
+            nv = nv_all[flat]
+            csum = jnp.cumsum(nv_all)
+            ib = csum[flat] - nv_all[flat] if id_base is None else id_base
+            nt = csum[-1] if n_total is None else n_total
     else:
         nv = jnp.asarray(n_valid, jnp.int32).reshape(())
+        if part is not None:
+            nv = nv * part[flat]
         ib, nt = id_base, n_total
         if ib is None or nt is None:
             nv_all = jax.lax.all_gather(nv, axes, tiled=False)
@@ -322,6 +341,8 @@ def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
             nt = csum[-1] if nt is None else nt
     ib = jnp.asarray(ib, jnp.int32)
     nt = jnp.asarray(nt, jnp.int32)
+    psum = ((lambda v: ops._tree_psum(v, axes, tree_fanout))
+            if tree_fanout >= 2 else (lambda v: jax.lax.psum(v, axes)))
 
     if bn is None:
         bn = tuning.approx_blocks(Q, n_loc, W)
@@ -341,7 +362,7 @@ def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
     rows = jnp.arange(Q)[:, None]
     hist_loc = jnp.zeros((Q, bins), jnp.int32).at[
         rows, jnp.clip(dd, 0, bins - 1)].add((dd < bins).astype(jnp.int32))
-    hist_glob = jax.lax.psum(hist_loc, axes)
+    hist_glob = psum(hist_loc)
     cum_g = jnp.cumsum(hist_glob, axis=-1)
     _, r_star, n_lt, n_emit = ops._radius_from_cum(cum_g, k_k)
 
@@ -371,8 +392,8 @@ def approx_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
         jnp.where(slot < k_k, sd + 1, 0), mode="drop")
     oi = jnp.zeros((Q, k_k), jnp.int32).at[rows, slot].add(
         jnp.where(slot < k_k, si + 1, 0), mode="drop")
-    od = jax.lax.psum(od, axes) - 1
-    oi = jax.lax.psum(oi, axes) - 1
+    od = psum(od) - 1
+    oi = psum(oi) - 1
     return ops._finalize_slots(od, oi, n_emit, k, k_k, bins, nt)
 
 

@@ -119,6 +119,48 @@ def _radius_from_cum(cum: jax.Array, k_k: int):
     return k_eff, r_star, n_lt, n_emit
 
 
+def _tree_psum(x: jax.Array, axes, fanout: int) -> jax.Array:
+    """Hierarchical all-reduce: a plain psum over the trailing (intra-host)
+    axes, then rounds of ``fanout``-wide grouped psums over the leading
+    axis. Integer addition is associative and commutative, so the result
+    is bit-identical to ``jax.lax.psum(x, axes)`` — the tree only changes
+    WHICH partial sums materialize: O(log_f S) rounds of f-wide group
+    reductions instead of one S-wide reduction, the inter-host half of the
+    hist_tree merge strategy.
+
+    Round structure over the leading axis (size S): at stride s (starting
+    1), indices {b + off + j*s : j < f} form one group — f representatives
+    of f consecutive already-reduced spans — and exchange via f-1 rotation
+    ``ppermute``s so after the round every index holds the sum of its span
+    of s*f consecutive elements. Rounds run while s*f divides S; a final
+    group round over the surviving S//s spans closes any
+    non-power-of-``fanout`` remainder. (Rotation ppermutes rather than
+    ``psum(axis_index_groups=...)`` because shard_map supports the
+    former; the sums are identical either way.)"""
+    axes = tuple(axes)
+    if len(axes) > 1:
+        x = jax.lax.psum(x, axes[1:])
+    a = axes[0]
+    size = jax.lax.psum(1, a)          # static: python int, the axis size
+
+    def group_round(x, s, f):
+        y = x
+        for r in range(1, f):
+            perm = [(b + off + j * s, b + off + ((j + r) % f) * s)
+                    for b in range(0, size, s * f)
+                    for off in range(s) for j in range(f)]
+            y = y + jax.lax.ppermute(x, a, perm)
+        return y
+
+    s = 1
+    while s * fanout <= size and size % (s * fanout) == 0:
+        x = group_round(x, s, fanout)
+        s *= fanout
+    if s < size:
+        x = group_round(x, s, size // s)
+    return x
+
+
 def _finalize_slots(out_d: jax.Array, out_i: jax.Array, n_emit: jax.Array,
                     k: int, k_k: int, bins: int, sentinel_id):
     """Slot-ordered emit output -> the select contract: untouched slots
@@ -240,6 +282,8 @@ def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
                          n_total: jax.Array | int | None = None,
                          perm: jax.Array | None = None,
                          block_mask: jax.Array | None = None,
+                         participate: jax.Array | None = None,
+                         tree_fanout: int = 0,
                          bq: int | None = None, bn: int | None = None,
                          sub: int | None = None):
     """Distributed counting select — the sharded fused top-k WITHOUT a
@@ -282,6 +326,21 @@ def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
     shard's owned slots before the output psum. ``block_mask``: this
     shard's (Q_pad/bq, n_loc_pad/bn) enable mask (core/layout.py
     semantics; r* then derives from the globally-merged MASKED histogram).
+
+    ``participate``: optional (n_shards,) replicated 0/1 mask in flat-shard
+    order — the fault-tolerance hook. A shard with participate == 0 (dead)
+    contributes NO rows: its n_valid is zeroed, and id bases / n_total
+    derive from the exclusive scan of the MASKED per-shard counts, so ids
+    renumber exactly as a store rebuilt from only the surviving shards'
+    rows. The result is therefore bit-identical (dists AND ids, including
+    tie cuts and the all-dead n_total == 0 edge) to ``hamming_topk`` over
+    that surviving-rows store. Do not combine with explicit ``id_base`` /
+    ``n_total`` unless they already account for the mask.
+
+    ``tree_fanout``: 0 (default) reduces histograms and outputs with one
+    flat psum (strategy "hist_merge"); >= 2 switches both to the
+    hierarchical ``_tree_psum`` schedule (strategy "hist_tree") —
+    bit-identical results, tree-shaped traffic.
     """
     axes = tuple(axis_names)
     Q, W = q_packed.shape
@@ -296,12 +355,27 @@ def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
     for a in axes:
         flat = flat * jax.lax.psum(jnp.int32(1), a) + jax.lax.axis_index(a)
 
+    part = None
+    if participate is not None:
+        part = jnp.asarray(participate, jnp.int32).reshape(n_shards)
     if n_valid is None:
-        nv = jnp.int32(n_loc)
-        ib = (flat * n_loc).astype(jnp.int32) if id_base is None else id_base
-        nt = n_shards * n_loc if n_total is None else n_total
+        if part is None:
+            nv = jnp.int32(n_loc)
+            ib = ((flat * n_loc).astype(jnp.int32)
+                  if id_base is None else id_base)
+            nt = n_shards * n_loc if n_total is None else n_total
+        else:
+            # participation is replicated, so the masked per-shard counts —
+            # and their exclusive scan — need no gather at all
+            nv_all = part * jnp.int32(n_loc)                   # (n_shards,)
+            nv = nv_all[flat]
+            csum = jnp.cumsum(nv_all)
+            ib = csum[flat] - nv_all[flat] if id_base is None else id_base
+            nt = csum[-1] if n_total is None else n_total
     else:
         nv = jnp.asarray(n_valid, jnp.int32).reshape(())
+        if part is not None:
+            nv = nv * part[flat]
         ib, nt = id_base, n_total
         if ib is None or nt is None:
             nv_all = jax.lax.all_gather(nv, axes, tiled=False)
@@ -311,6 +385,8 @@ def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
             nt = csum[-1] if nt is None else nt
     ib = jnp.asarray(ib, jnp.int32)
     nt = jnp.asarray(nt, jnp.int32)
+    psum = ((lambda v: _tree_psum(v, axes, tree_fanout))
+            if tree_fanout >= 2 else (lambda v: jax.lax.psum(v, axes)))
 
     qp, xp, bq, bn, sub = _topk_blocked(q_packed, x_local,
                                         max(bins, k_k), bq, bn, sub)
@@ -322,7 +398,7 @@ def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
                                           bq=bq, bn=bn, sub=sub,
                                           interpret=interp)
     hist_loc = hist[:Q]
-    hist_glob = jax.lax.psum(hist_loc, axes)
+    hist_glob = psum(hist_loc)
     cum_g = jnp.cumsum(hist_glob, axis=-1)
     gather = lambda c, i: jnp.take_along_axis(c, i[:, None], axis=-1)[:, 0]
     _, r_star, n_lt, n_emit = _radius_from_cum(cum_g, k_k)
@@ -365,8 +441,8 @@ def hamming_topk_sharded(q_packed: jax.Array, x_local: jax.Array, k: int,
         oi = jnp.where(owned, mapped, 0)
         od = jnp.where(owned, od, 0)
 
-    od = jax.lax.psum(od, axes)
-    oi = jax.lax.psum(oi, axes)
+    od = psum(od)
+    oi = psum(oi)
 
     # untouched slots -> (bins, n_total) sentinels, one O(k log k) sort
     return _finalize_slots(od, oi, n_emit, k, k_k, bins, nt)

@@ -9,6 +9,11 @@ server uses ``store_search`` around the retrieval step and
 ``wal_append`` (before the intent-log write — a fired fault means the
 mutation was never acked), ``compact_build`` (before the rebuilt arena is
 swapped in), and ``epoch_install`` (before a fresh epoch is swapped in).
+The shard-fault-tolerance layer (dist/search.py) adds ``shard_hist``
+(before a unit's pass-1 histogram), ``shard_emit`` (before a unit's
+pass-2 winner emission) and ``merge_psum`` (before each hierarchical
+host-merge round) — all scoped per unit via ``site@unit`` so a soak can
+kill exactly one shard's calls while the fleet runs the base rate.
 
 Multi-tenant scoping (core/tenant.py): a site may be scoped to one tenant
 as ``"<site>@<tenant>"`` (:func:`site_key`). ``check(site, tenant=...)``
@@ -93,7 +98,9 @@ def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,
                max_backoff_s: float = 0.05, transient=TRANSIENT,
                on_retry: Optional[Callable] = None,
                sleep: Callable[[float], None] = time.sleep,
-               jitter: str = "full", rng=None):
+               jitter: str = "full", rng=None,
+               deadline_s: Optional[float] = None,
+               clock: Callable[[], float] = time.monotonic):
     """Call ``fn()`` with up to ``retries`` retries on transient errors;
     the last error re-raises.
 
@@ -104,12 +111,21 @@ def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,
     store at once; plain synchronized doubling would have every retry
     stampede it on the same schedule. ``jitter="none"`` keeps the legacy
     deterministic doubling (still capped). ``rng`` seeds the draws (an int
-    or a numpy Generator) so fault soaks stay reproducible."""
+    or a numpy Generator) so fault soaks stay reproducible.
+
+    ``deadline_s`` is the caller's REMAINING request budget, measured on
+    ``clock`` from entry: every backoff sleep is clamped to the budget
+    left after the failing attempt, and once the budget is exhausted the
+    next transient error re-raises immediately instead of sleeping — the
+    retry envelope can never push a request past its deadline. (Attempts
+    themselves are not interrupted; the budget bounds the sleep schedule,
+    which is what backoff adds on top of the caller's own work.)"""
     assert jitter in ("full", "none"), jitter
     if jitter == "full":
         import numpy as np
         if not hasattr(rng, "uniform"):
             rng = np.random.default_rng(rng)
+    t0 = clock() if deadline_s is not None else 0.0
     delay = min(backoff_s, max_backoff_s)
     for attempt in range(retries + 1):
         try:
@@ -117,7 +133,13 @@ def retry_call(fn: Callable, *, retries: int = 2, backoff_s: float = 1e-3,
         except transient as e:
             if attempt == retries:
                 raise
+            want = rng.uniform(0.0, delay) if jitter == "full" else delay
+            if deadline_s is not None:
+                remaining = deadline_s - (clock() - t0)
+                if remaining <= 0.0:
+                    raise
+                want = min(want, remaining)
             if on_retry is not None:
                 on_retry(e, attempt)
-            sleep(rng.uniform(0.0, delay) if jitter == "full" else delay)
+            sleep(want)
             delay = min(delay * 2.0, max_backoff_s)

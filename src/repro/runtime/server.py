@@ -20,12 +20,20 @@ rung at a time —
     rung 0: full exact plan          (bit-identical to the bare server)
     rung 1..m: masked hamming-prefix probe at decreasing nprobe
                (requires a power-of-two bucket layout on the store)
+    approx rungs: the MXU partial-reduce tier at recall_target 0.95,
+               0.9, 0.8 — the approx recall floor ADAPTS to observed
+               deadline pressure (EWMA walks it down, cooldown back up)
     last rung: retrieval-off decode  (LM softmax only)
 
 — re-logging the active plan on every transition and recovering one rung
 per ``cooldown_ticks`` of calm. Injected/real transient search failures
 retry with bounded backoff, then try restoring the datastore from its
-last-good snapshot, then fail over to retrieval-off for the tick.
+last-good snapshot, then — with a shard-fault-tolerance layer attached
+(``shard_search``, dist/search.py) — the SHARD-LOSS rung: serve a
+degraded-but-exact view of only the covered rows (honest coverage in
+``stats()["shards"]``) before finally failing over to retrieval-off.
+``_after_tick`` drives the shard layer's background re-replication and
+swaps the full store back the moment coverage returns to 1.0.
 
 Mutable stores (core/mutable.py) attach directly: the server serves one
 installed epoch per view, runs cooperative compaction + flush + periodic
@@ -157,7 +165,8 @@ class Server:
                  snapshot_every: Optional[int] = None,
                  audit_every: Optional[int] = None,
                  mutate_flush_every: int = 4,
-                 tenants: Optional[tenant_mod.TenantArena] = None):
+                 tenants: Optional[tenant_mod.TenantArena] = None,
+                 shard_search=None):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.max_batch, self.max_len = max_batch, max_len
         # a MutableStore (core/mutable.py) serves through its installed
@@ -178,6 +187,26 @@ class Server:
             collections.defaultdict(collections.Counter))
         self._tenant_tick_mut: Dict[str, int] = {}
         self.with_retrieval = cfg.retrieval.enabled and store is not None
+        # shard-fault-tolerance layer (dist/search.FaultTolerantSearch over
+        # the SAME corpus): when attached, the server tracks its coverage —
+        # a dead shard swaps in a degraded store VIEW of only the covered
+        # rows (the shard-loss rung of the failover ladder), maintenance
+        # re-replicates in the background, and recovery swaps the full
+        # store back. The view search is exact over the surviving rows;
+        # coverage is surfaced in stats()["shards"], never silently lost.
+        self.shard_search = shard_search
+        self._full_store = store
+        self._shard_cov_sig = None
+        self._shard_view_cache: Dict[tuple, object] = {}
+        if shard_search is not None:
+            if store is None:
+                raise ValueError("shard_search needs a datastore to shadow")
+            n_store = int(store.codes.shape[0])
+            if shard_search.map.total_rows != n_store:
+                raise ValueError(
+                    f"shard_search covers {shard_search.map.total_rows} "
+                    f"rows but the store has {n_store}")
+            self._shard_cov_sig = shard_search.covered_ranges()
         self.max_queue = max_queue
         self.default_deadline_ticks = default_deadline_ticks
         self.policy = degradation
@@ -245,13 +274,18 @@ class Server:
                 rungs += [Rung(f"probe{n}", True, n)
                           for n in nprobes if n < B]
         if self.policy is not None:
-            # the last rung that still retrieves: the compute-bound approx
+            # the last rungs that still retrieve: the compute-bound approx
             # tier at a bounded recall loss — cheaper than any masked probe
             # (no candidate re-streaming, one matmul + tiny pool merge) but
-            # still a real neighbor distribution, so load has one more
-            # stop before retrieval quality drops to zero
-            rungs.append(Rung("approx", True, 0, select="approx",
-                              recall_target=0.9))
+            # still a real neighbor distribution, so load has more stops
+            # before retrieval quality drops to zero. THREE rungs at
+            # decreasing recall_target: the policy's EWMA pressure walks
+            # rt 0.95 -> 0.9 -> 0.8 one rung per pressured tick and the
+            # cooldown walks it back — the approx tier's recall floor
+            # adapts to observed deadline pressure instead of being pinned
+            rungs += [Rung(f"approx_rt{int(rt * 100)}", True, 0,
+                           select="approx", recall_target=rt)
+                      for rt in (0.95, 0.9, 0.8)]
         rungs.append(Rung("retrieval_off", False, 0))
         return rungs
 
@@ -294,6 +328,11 @@ class Server:
     # -- the decode step (guarded) ----------------------------------------
 
     def _step(self, token: np.ndarray, active: np.ndarray, r: Rung):
+        if r.nprobe and self.store is not self._full_store:
+            # masked-probe fns are compiled against the FULL store's bucket
+            # layout; a shard-degraded view has no layout — serve the view
+            # through the exact plan instead of a mis-aimed probe
+            r = self.rungs[0]
         fn = self._rung_fn(r)
         args = (self.params, jnp.asarray(token), self.state,
                 jnp.asarray(active))
@@ -332,6 +371,19 @@ class Server:
                 return self._step(token, active, r)
             except faults_mod.TRANSIENT:
                 self.counters["search_failures"] += 1
+        # shard-loss rung: if the shard layer says part of the fleet is
+        # gone, serve the degraded-but-exact surviving-rows view before
+        # giving up on retrieval entirely — a partial answer with honest
+        # coverage beats no retrieval at all
+        if self.shard_search is not None and self._refresh_shard_view():
+            try:
+                if inj is not None:
+                    inj.check("store_search")
+                out = self._step(token, active, r)
+                self.counters["shard_failover_ticks"] += 1
+                return out
+            except faults_mod.TRANSIENT:
+                self.counters["search_failures"] += 1
         # the search is unavailable this tick: decode without retrieval
         # rather than stalling every slot; the policy walks back up once
         # the store recovers
@@ -363,8 +415,46 @@ class Server:
         if tree is None:
             return False
         self.store = tree
+        if self.shard_search is not None:
+            # the snapshot is the FULL store; re-sync the shard view to
+            # current coverage on the next refresh
+            self._full_store = tree
+            self._shard_view_cache.clear()
+            self._shard_cov_sig = None
         self.counters["snapshot_restores"] += 1
         log.info("datastore restored from snapshot step %s", step)
+        return True
+
+    def _refresh_shard_view(self) -> bool:
+        """Sync ``self.store`` to the shard layer's current coverage:
+        full store when every range is covered, else a degraded VIEW of
+        only the covered rows (original row order, no layout — exact plan).
+        Views are cached per coverage signature so a flapping shard never
+        rebuilds the same view twice. Returns True iff the store swapped."""
+        sig = self.shard_search.covered_ranges()
+        if sig == self._shard_cov_sig:
+            return False
+        self._shard_cov_sig = sig
+        cov = self.shard_search.coverage()
+        if cov.complete:
+            self.store = self._full_store
+            self.counters["shard_recoveries"] += 1
+            log.info("shard coverage restored: serving the full store "
+                     "(%d rows)", cov.total_rows)
+            return True
+        view = self._shard_view_cache.get(sig)
+        if view is None:
+            m = self.shard_search.covered_row_ids()
+            view = self._full_store._replace(
+                codes=jnp.asarray(np.asarray(self._full_store.codes)[m]),
+                values=jnp.asarray(np.asarray(self._full_store.values)[m]),
+                layout=None, key_positions=None)
+            self._shard_view_cache[sig] = view
+        self.store = view
+        self.counters["shard_losses"] += 1
+        log.info("shard loss: serving degraded store view %s "
+                 "(coverage %.3f, dead=%s)", sig, cov.coverage_frac,
+                 list(cov.dead_shards))
         return True
 
     def _save_store_snapshot(self):
@@ -660,6 +750,16 @@ class Server:
             self._store_maintenance()
         if self.tenants is not None:
             self._tenant_maintenance()
+        if self.shard_search is not None:
+            # bounded background re-replication + recovery promotion, then
+            # keep the serving view in lockstep with coverage (a revived
+            # fleet swaps the full store back in without waiting for a
+            # search failure to notice)
+            m = self.shard_search.maintain(budget=1)
+            self.counters["shard_rebuilt_ranges"] += m["copied"]
+            self._refresh_shard_view()
+            if self.store is not self._full_store:
+                self.counters["shard_degraded_ticks"] += 1
         if self.policy is not None and len(self.rungs) > 1:
             new = self.policy.update(self.rung, len(self.rungs),
                                      len(self.waiting), dt)
@@ -736,8 +836,21 @@ class Server:
             "flush_failures": c["flush_failures"],
             "audits": c["audits"],
             "audit_failures": c["audit_failures"],
+            **self._shard_stats(),
             **self._tenant_stats(),
         }
+
+    def _shard_stats(self) -> dict:
+        if self.shard_search is None:
+            return {}
+        cov = self.shard_search.coverage()
+        return {"shards": self.shard_search.stats(),
+                "coverage_frac": cov.coverage_frac,
+                "shard_losses": self.counters["shard_losses"],
+                "shard_recoveries": self.counters["shard_recoveries"],
+                "shard_degraded_ticks": self.counters["shard_degraded_ticks"],
+                "shard_failover_ticks": self.counters["shard_failover_ticks"],
+                "shard_rebuilt_ranges": self.counters["shard_rebuilt_ranges"]}
 
     def _tenant_stats(self) -> dict:
         if self.tenants is None:

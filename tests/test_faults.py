@@ -83,3 +83,81 @@ def test_last_error_reraises_after_exhaustion():
 def test_invalid_jitter_mode_rejected():
     with pytest.raises(AssertionError):
         faults_mod.retry_call(lambda: "ok", jitter="half")
+
+
+# ---------------------------------------------------------------------------
+# deadline budget: the retry envelope can never outlive the request
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    """Injectable monotonic clock: sleeps advance it, so the deadline
+    accounting is exact and the test never really waits."""
+
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+def test_deadline_clamps_every_sleep_to_remaining_budget():
+    clk = _FakeClock()
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        clk.sleep(s)
+
+    out = faults_mod.retry_call(_failing(3)[0], retries=4, backoff_s=0.04,
+                                max_backoff_s=0.04, jitter="none",
+                                sleep=sleep, deadline_s=0.1, clock=clk)
+    # the schedule wants 0.04 each time, but the budget has only 0.02 left
+    # by the third sleep: it is clamped to exactly what remains
+    assert out == "ok"
+    assert slept[:2] == [0.04, 0.04]
+    assert len(slept) == 3 and abs(slept[2] - 0.02) < 1e-9
+    assert sum(slept) <= 0.1 + 1e-12
+
+
+def test_deadline_exhaustion_reraises_instead_of_sleeping():
+    clk = _FakeClock()
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        clk.sleep(s)
+
+    fn, state = _failing(10)
+    with pytest.raises(faults_mod.InjectedFault):
+        faults_mod.retry_call(fn, retries=10, backoff_s=0.05,
+                              max_backoff_s=0.05, jitter="none",
+                              sleep=sleep, deadline_s=0.12, clock=clk)
+    # 0.05 + 0.05 spends the budget; the next transient error re-raises
+    # immediately — the envelope ends BEFORE the retries run out
+    assert state["calls"] < 11
+    assert sum(slept) <= 0.12 + 1e-12
+
+
+def test_deadline_none_keeps_unbounded_envelope():
+    slept = []
+    faults_mod.retry_call(_failing(3)[0], retries=3, backoff_s=1e-3,
+                          max_backoff_s=1e-3, jitter="none",
+                          sleep=slept.append, deadline_s=None)
+    assert slept == [1e-3, 1e-3, 1e-3]
+
+
+def test_deadline_composes_with_full_jitter():
+    clk = _FakeClock()
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        clk.sleep(s)
+
+    faults_mod.retry_call(_failing(5)[0], retries=5, backoff_s=0.02,
+                          max_backoff_s=0.08, sleep=sleep, rng=0,
+                          deadline_s=0.05, clock=clk)
+    assert sum(slept) <= 0.05 + 1e-12
